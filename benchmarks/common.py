@@ -1,0 +1,52 @@
+"""Shared benchmark infrastructure: timing, CSV rows, artifact cache."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def cache_path(name: str) -> str:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    return os.path.join(BENCH_DIR, f"{name}.json")
+
+
+def save_rows(name: str, rows: List[Dict]):
+    with open(cache_path(name), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+
+
+def load_rows(name: str):
+    p = cache_path(name)
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds (blocks on jax arrays)."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit_csv(rows: List[Dict]):
+    """Print ``name,us_per_call,derived`` CSV lines."""
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}",
+              flush=True)

@@ -1,0 +1,59 @@
+"""Fig. 10: warm vs cold start on out-of-distribution workloads (AI-City-
+style switch). Warm = fleet pre-trained on the original traces; cold = blank
+fleet; bcedge = offline-frozen baseline on the same OOD traces."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_rows
+from repro.configs.fcpo import FCPOConfig
+from repro.core.baselines import run_bcedge
+from repro.core.fleet import fleet_init, train_fleet
+from repro.data.workload import DYNAMIC, fleet_traces, ood_traces
+
+
+def run(quick: bool = True, n: int = 8):
+    cached = load_rows("fig10")
+    if cached:
+        return cached
+    cfg = FCPOConfig()
+    pre_eps = 150 if quick else 500
+    ood_eps = 120 if quick else 300
+    key = jax.random.PRNGKey(0)
+
+    warm = fleet_init(cfg, n, key)
+    warm, _ = train_fleet(cfg, warm, fleet_traces(jax.random.PRNGKey(1), n,
+                                                  pre_eps * cfg.n_steps))
+    ood = ood_traces(jax.random.PRNGKey(2), n, ood_eps * cfg.n_steps)
+
+    _, h_warm = train_fleet(cfg, warm, ood)
+    cold = fleet_init(cfg, n, jax.random.PRNGKey(3))
+    _, h_cold = train_fleet(cfg, cold, ood)
+    h_bce = run_bcedge(n, ood, key, offline_episodes=60 if quick else 150)
+
+    rows = []
+    k = max(ood_eps // 10, 5)
+    for name, h in (("warm", h_warm), ("cold", h_cold), ("bcedge", h_bce)):
+        rows.append({
+            "name": f"fig10_{name}",
+            "eff_thr_first": float(np.mean(h["effective_throughput"][:k])),
+            "eff_thr_last": float(np.mean(h["effective_throughput"][-k:])),
+            "reward_first": float(np.mean(h["reward"][:k])),
+            "reward_last": float(np.mean(h["reward"][-k:])),
+        })
+    save_rows("fig10", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    return [{
+        "name": r["name"], "us_per_call": "",
+        "derived": (f"eff_thr {r['eff_thr_first']:.1f}->{r['eff_thr_last']:.1f} "
+                    f"reward {r['reward_first']:+.2f}->{r['reward_last']:+.2f}"),
+    } for r in run(quick)]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(main())

@@ -1,0 +1,88 @@
+"""Fig. 11: per-agent overheads — memory, decision latency, update latency —
+FCPO iAgent vs the BCEdge-style bulky agent (measured on this host)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import load_rows, save_rows, time_call
+from repro.configs.fcpo import FCPOConfig
+from repro.core.agent import agent_init, full_mask, param_bytes, sample_actions
+from repro.core.baselines import bcedge_config
+from repro.core.buffer import buffer_init, buffer_memory_bytes
+from repro.core.ppo import agent_opt_init, agent_update, Rollout
+
+
+def _rollout(cfg, key):
+    ks = jax.random.split(key, 4)
+    t = cfg.n_steps
+    return Rollout(
+        states=jax.random.normal(ks[0], (t, cfg.state_dim)),
+        actions=jnp.stack([jax.random.randint(ks[1], (t,), 0, cfg.n_res),
+                           jax.random.randint(ks[2], (t,), 0, cfg.n_bs),
+                           jax.random.randint(ks[3], (t,), 0, cfg.n_mt)], -1),
+        logp_old=-jnp.ones((t,)),
+        rewards=jnp.zeros((t,)),
+        values_old=jnp.zeros((t,)),
+    )
+
+
+def run(quick: bool = True):
+    cached = load_rows("fig11")
+    if cached:
+        return cached
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for name, cfg in (("fcpo", FCPOConfig(loss_gate=0.0)),
+                      ("bcedge", bcedge_config()._replace() if False
+                       else bcedge_config())):
+        params = agent_init(cfg, key)
+        opt = agent_opt_init(params)
+        mask = full_mask(cfg)
+        state = jax.random.normal(key, (cfg.state_dim,))
+        decide = jax.jit(lambda p, s, k: sample_actions(cfg, p, s, mask, k)[0])
+        dec_us = time_call(decide, params, state, key, iters=30)
+        roll = _rollout(cfg, key)
+        upd = jax.jit(lambda p, o: agent_update(cfg, p, o, roll, mask)[:2])
+        upd_us = time_call(upd, params, opt, iters=10)
+        mem = param_bytes(params) + buffer_memory_bytes(cfg)
+        if name == "bcedge":
+            # offline replay: 7000 experiences x (8 state + 3 act + misc) fp32
+            mem += 7000 * (cfg.state_dim + 8) * 4
+        rows.append({
+            "name": f"fig11_{name}",
+            "param_kb": param_bytes(params) / 1024,
+            "total_mem_kb": mem / 1024,
+            "decision_us": dec_us,
+            "update_us": upd_us,
+        })
+    # derived ratios (paper: up to 10x memory, 1.5-2x decision latency)
+    f, b = rows[0], rows[1]
+    rows.append({
+        "name": "fig11_ratios",
+        "mem_ratio": b["total_mem_kb"] / f["total_mem_kb"],
+        "decision_ratio": b["decision_us"] / f["decision_us"],
+        "update_ratio": b["update_us"] / f["update_us"],
+    })
+    save_rows("fig11", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    out = []
+    for r in run(quick):
+        if r["name"] == "fig11_ratios":
+            out.append({"name": r["name"], "us_per_call": "",
+                        "derived": (f"bcedge/fcpo mem={r['mem_ratio']:.1f}x "
+                                    f"decision={r['decision_ratio']:.2f}x")})
+        else:
+            out.append({"name": r["name"],
+                        "us_per_call": f"{r['decision_us']:.0f}",
+                        "derived": (f"mem={r['total_mem_kb']:.0f}KB "
+                                    f"update={r['update_us']:.0f}us")})
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(main())

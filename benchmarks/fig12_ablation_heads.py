@@ -1,0 +1,49 @@
+"""Fig. 12: ablation — cascaded three-head iAgent vs FCPO-reduced (one joint
+action head) on identical traces."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_rows
+from repro.configs.fcpo import FCPOConfig
+from repro.core.fleet import fleet_init, train_fleet
+from repro.data.workload import fleet_traces
+
+
+def run(quick: bool = True, n: int = 8):
+    cached = load_rows("fig12")
+    if cached:
+        return cached
+    episodes = 250 if quick else 600
+    rows = []
+    for name, cfg in (("cascaded", FCPOConfig()),
+                      ("reduced_single_head", FCPOConfig(single_head=True))):
+        key = jax.random.PRNGKey(0)
+        traces = fleet_traces(jax.random.PRNGKey(1), n, episodes * cfg.n_steps)
+        fleet = fleet_init(cfg, n, key)
+        _, h = train_fleet(cfg, fleet, traces)
+        tail = max(episodes // 3, 10)
+        rows.append({
+            "name": f"fig12_{name}",
+            "reward": float(np.mean(h["reward"][-tail:])),
+            "effective_throughput":
+                float(np.mean(h["effective_throughput"][-tail:])),
+            "latency_ms": float(np.mean(h["latency"][-tail:]) * 1e3),
+        })
+    save_rows("fig12", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    return [{
+        "name": r["name"], "us_per_call": "",
+        "derived": (f"reward={r['reward']:+.2f} "
+                    f"eff_thr={r['effective_throughput']:.1f}/s "
+                    f"lat={r['latency_ms']:.0f}ms"),
+    } for r in run(quick)]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(main())

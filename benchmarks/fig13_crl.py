@@ -1,0 +1,56 @@
+"""Fig. 13: impact of continual learning — a trained-then-frozen fleet vs a
+continually-learning fleet on concatenated 5-min segments from different
+sources (drastic context switches)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_rows
+from repro.configs.fcpo import FCPOConfig
+from repro.core.fleet import fleet_init, train_fleet
+from repro.data.workload import fleet_traces, switching_traces
+
+
+def run(quick: bool = True, n: int = 8):
+    cached = load_rows("fig13")
+    if cached:
+        return cached
+    cfg = FCPOConfig()
+    pre_eps = 150 if quick else 500
+    sw_eps = 150 if quick else 400
+    key = jax.random.PRNGKey(0)
+    fleet = fleet_init(cfg, n, key)
+    fleet, _ = train_fleet(cfg, fleet, fleet_traces(jax.random.PRNGKey(1), n,
+                                                    pre_eps * cfg.n_steps))
+    switch = switching_traces(jax.random.PRNGKey(2), n, sw_eps * cfg.n_steps,
+                              segment=50)
+    _, h_crl = train_fleet(cfg, fleet, switch)
+    _, h_frozen = train_fleet(cfg, fleet, switch, learn=False, federated=False)
+
+    rows = []
+    for name, h in (("crl", h_crl), ("frozen", h_frozen)):
+        eff = np.asarray(h["effective_throughput"])
+        rows.append({
+            "name": f"fig13_{name}",
+            "effective_throughput": float(eff.mean()),
+            "eff_thr_last_third": float(eff[-len(eff) // 3:].mean()),
+            "reward": float(np.mean(h["reward"])),
+            "curve_eff": [float(x) for x in eff],
+        })
+    save_rows("fig13", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    return [{
+        "name": r["name"], "us_per_call": "",
+        "derived": (f"eff_thr={r['effective_throughput']:.1f}/s "
+                    f"(last3rd {r['eff_thr_last_third']:.1f}) "
+                    f"reward={r['reward']:+.2f}"),
+    } for r in run(quick)]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(main())

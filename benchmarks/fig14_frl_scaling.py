@@ -1,0 +1,64 @@
+"""Fig. 14: convergence speed vs number of federated pipelines (1 disables
+aggregation; more agents -> faster, smoother convergence, diminishing
+returns)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_rows
+from repro.configs.fcpo import FCPOConfig
+from repro.core.fleet import fleet_init, train_fleet
+from repro.data.workload import fleet_traces
+
+
+def _converge_episode(curve, frac=0.9):
+    """First episode reaching ``frac`` of the final plateau improvement."""
+    curve = np.asarray(curve)
+    k = max(len(curve) // 10, 2)
+    start, end = curve[:k].mean(), curve[-k:].mean()
+    if end <= start:
+        return len(curve)
+    thresh = start + frac * (end - start)
+    smooth = np.convolve(curve, np.ones(k) / k, mode="valid")
+    hits = np.where(smooth >= thresh)[0]
+    return int(hits[0]) if len(hits) else len(curve)
+
+
+def run(quick: bool = True):
+    cached = load_rows("fig14")
+    if cached:
+        return cached
+    episodes = 250 if quick else 600
+    rows = []
+    for n in (1, 2, 4, 8, 16):
+        cfg = FCPOConfig()
+        key = jax.random.PRNGKey(0)
+        traces = fleet_traces(jax.random.PRNGKey(1), n, episodes * cfg.n_steps)
+        fleet = fleet_init(cfg, n, key)
+        _, h = train_fleet(cfg, fleet, traces, federated=(n > 1))
+        curve = h["reward"]
+        tail = max(episodes // 5, 5)
+        rows.append({
+            "name": f"fig14_pipelines{n}",
+            "pipelines": n,
+            "reward_final": float(np.mean(curve[-tail:])),
+            "converge_episode": _converge_episode(curve),
+            "reward_std_tail": float(np.std(curve[-tail:])),
+        })
+    save_rows("fig14", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    return [{
+        "name": r["name"], "us_per_call": "",
+        "derived": (f"final={r['reward_final']:+.3f} "
+                    f"converge@{r['converge_episode']}ep "
+                    f"std={r['reward_std_tail']:.3f}"),
+    } for r in run(quick)]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(main())

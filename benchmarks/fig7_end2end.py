@@ -1,0 +1,67 @@
+"""Fig. 7: end-to-end throughput / effective throughput / latency —
+FCPO vs BCEdge-like, OctopInf-like, Distream-like on identical traces."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_rows
+from repro.configs.fcpo import FCPOConfig
+from repro.core.baselines import run_bcedge, run_distream, run_octopinf
+from repro.core.fleet import fleet_init, train_fleet
+from repro.data.workload import DYNAMIC, fleet_traces
+
+
+def run(quick: bool = True, n: int = 8, seed: int = 0):
+    cached = load_rows("fig7")
+    if cached:
+        return cached
+    episodes = 700 if quick else 1400
+    cfg = FCPOConfig()
+    key = jax.random.PRNGKey(seed)
+    traces = fleet_traces(jax.random.PRNGKey(seed + 1), n,
+                          episodes * cfg.n_steps, **DYNAMIC)
+
+    fleet = fleet_init(cfg, n, key, n_pods=2)
+    _, h_fcpo = train_fleet(cfg, fleet, traces)
+    h_bce = run_bcedge(n, traces, key,
+                       offline_episodes=60 if quick else 150)
+    h_oct = run_octopinf(n, traces, seed)
+    h_dis = run_distream(n, traces, seed)
+
+    rows = []
+    tail = max(episodes // 3, 10)  # converged regime
+    for name, h in (("fcpo", h_fcpo), ("bcedge", h_bce),
+                    ("octopinf", h_oct), ("distream", h_dis)):
+        rows.append({
+            "name": f"fig7_{name}",
+            "throughput": float(np.mean(h["throughput"][-tail:])),
+            "effective_throughput":
+                float(np.mean(h["effective_throughput"][-tail:])),
+            "latency_ms": float(np.mean(h["latency"][-tail:]) * 1e3),
+            "reward": float(np.mean(h["reward"][-tail:])),
+            "curve_reward": [float(x) for x in h["reward"]],
+            "curve_eff": [float(x) for x in h["effective_throughput"]],
+            "curve_latency": [float(x) for x in h["latency"]],
+        })
+    save_rows("fig7", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(quick)
+    out = []
+    for r in rows:
+        out.append({
+            "name": r["name"],
+            "us_per_call": "",
+            "derived": (f"eff_thr={r['effective_throughput']:.1f}/s "
+                        f"thr={r['throughput']:.1f}/s "
+                        f"lat={r['latency_ms']:.0f}ms"),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(main())

@@ -1,0 +1,60 @@
+"""Fig. 7b / §V-B2: federated-learning round latency.
+
+Measures (a) the real wall time of one Algorithm-1 aggregation + head
+fine-tune over an n-agent fleet on this host and (b) the modeled on-wire
+round trip: agent payload (53 KB-class) over the paper's 5G links vs this
+framework's ICI all-reduce (the collective replaces the parameter server)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_rows, time_call
+from repro.configs.fcpo import FCPOConfig
+from repro.core.agent import param_bytes
+from repro.core.fleet import fl_round, fleet_episode, fleet_init
+from repro.data.workload import fleet_traces
+
+
+def run(quick: bool = True):
+    cached = load_rows("fig7b")
+    if cached:
+        return cached
+    cfg = FCPOConfig(fl_every=1)
+    rows = []
+    for n in (8, 32, 128):
+        key = jax.random.PRNGKey(0)
+        fleet = fleet_init(cfg, n, key, n_pods=max(1, n // 16))
+        traces = fleet_traces(key, n, cfg.n_steps)
+        fleet, rollouts, _ = fleet_episode(cfg, fleet, traces)
+        us = time_call(lambda: fl_round(cfg, fleet, rollouts), iters=5)
+
+        one_agent = jax.tree.map(lambda x: x[0], fleet.astate.params)
+        payload = param_bytes(one_agent)
+        # paper transport: 5G up+down per client, serialized at the server
+        t_5g = 2 * payload * 8 / 10e6 * n
+        # this framework: ring all-reduce over ICI links
+        t_ici = 2 * payload * n / 50e9
+        rows.append({
+            "name": f"fig7b_fl_round_n{n}",
+            "agents": n,
+            "agent_kb": payload / 1024,
+            "wall_us": us,
+            "modeled_5g_ms": t_5g * 1e3,
+            "modeled_ici_us": t_ici * 1e6,
+        })
+    save_rows("fig7b", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    return [{
+        "name": r["name"], "us_per_call": f"{r['wall_us']:.0f}",
+        "derived": (f"agent={r['agent_kb']:.1f}KB 5G={r['modeled_5g_ms']:.0f}ms "
+                    f"ici={r['modeled_ici_us']:.1f}us"),
+    } for r in run(quick)]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(main())

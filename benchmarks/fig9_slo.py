@@ -1,0 +1,53 @@
+"""Fig. 9: effective throughput under increasingly strict SLOs
+(250 -> 200 -> 100 ms) for FCPO vs the non-adaptive baselines."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_rows
+from repro.configs.fcpo import FCPOConfig
+from repro.core.baselines import run_distream, run_octopinf
+from repro.core.fleet import fleet_init, train_fleet
+from repro.data.workload import DYNAMIC, fleet_traces
+
+
+def run(quick: bool = True, n: int = 8):
+    cached = load_rows("fig9")
+    if cached:
+        return cached
+    episodes = 200 if quick else 600
+    rows = []
+    for slo_ms in (250, 200, 100):
+        cfg = FCPOConfig(slo_s=slo_ms / 1000.0)
+        key = jax.random.PRNGKey(0)
+        traces = fleet_traces(jax.random.PRNGKey(1), n, episodes * cfg.n_steps,
+                              **DYNAMIC)
+        fleet = fleet_init(cfg, n, key, slo_s=cfg.slo_s)
+        _, h = train_fleet(cfg, fleet, traces)
+        h_oct = run_octopinf(n, traces, 0, cfg=cfg)
+        h_dis = run_distream(n, traces, 0, cfg=cfg)
+        tail = max(episodes // 3, 10)
+        for name, hh in (("fcpo", h), ("octopinf", h_oct), ("distream", h_dis)):
+            rows.append({
+                "name": f"fig9_{name}_slo{slo_ms}",
+                "slo_ms": slo_ms,
+                "effective_throughput":
+                    float(np.mean(hh["effective_throughput"][-tail:])),
+                "latency_ms": float(np.mean(hh["latency"][-tail:]) * 1e3),
+            })
+    save_rows("fig9", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    return [{
+        "name": r["name"], "us_per_call": "",
+        "derived": (f"eff_thr={r['effective_throughput']:.1f}/s "
+                    f"lat={r['latency_ms']:.0f}ms"),
+    } for r in run(quick)]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(main())

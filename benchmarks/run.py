@@ -1,0 +1,53 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: each ``fig*`` module reproduces one figure/table of the
+FCPO paper on this host (quick mode by default; ``--full`` for paper-scale
+episode counts); ``roofline`` reports the §Roofline table from the dry-run
+delta-method artifacts (see benchmarks/roofline.py)."""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig7_end2end, fig7b_fl_latency, fig8_learning,
+                        fig9_slo, fig10_warmstart, fig11_overhead,
+                        fig12_ablation_heads, fig13_crl, fig14_frl_scaling,
+                        roofline)
+from benchmarks.common import emit_csv
+
+BENCHES = [
+    ("fig7_end2end", fig7_end2end.main),
+    ("fig8_learning", fig8_learning.main),
+    ("fig7b_fl_latency", fig7b_fl_latency.main),
+    ("fig9_slo", fig9_slo.main),
+    ("fig10_warmstart", fig10_warmstart.main),
+    ("fig11_overhead", fig11_overhead.main),
+    ("fig12_ablation_heads", fig12_ablation_heads.main),
+    ("fig13_crl", fig13_crl.main),
+    ("fig14_frl_scaling", fig14_frl_scaling.main),
+    ("roofline", roofline.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale episode counts (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            emit_csv(fn(quick=not args.full))
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

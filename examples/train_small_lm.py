@@ -1,0 +1,36 @@
+"""Train a small LM with the full training substrate: AdamW, remat,
+microbatching, checkpointing + restart.
+
+By default trains a ~6M-param qwen2-family model for 200 steps (CPU-friendly);
+``--full-100m`` selects a ~100M config (12L x 512d x 50k vocab) for real
+hardware — the code path is identical, only dims change.
+
+Run:  PYTHONPATH=src python examples/train_small_lm.py [--steps 200]
+"""
+import argparse
+
+from repro.launch import train as train_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_small_lm")
+    args = ap.parse_args()
+
+    argv = ["--arch", "qwen2-0.5b", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--lr", "1e-3",
+            "--microbatches", "2", "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100"]
+    if not args.full_100m:
+        argv.append("--reduced")
+    train_launcher.main(argv)
+    print("\ncheckpoints in", args.ckpt_dir,
+          "\nresume with: python -m repro.launch.train --arch qwen2-0.5b "
+          f"--reduced --resume --ckpt-dir {args.ckpt_dir} --steps "
+          f"{args.steps * 2}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""qwen2-7b [dense]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+
+GQA with 4 kv heads, QKV bias, rope_theta=1e6, untied embeddings
+[arXiv:2407.10671].
+"""
+from repro.configs.base import ArchConfig
+from repro.configs.base import register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    skip_shapes=(("long_500k", "full quadratic attention; no sub-quadratic path"),),
+))

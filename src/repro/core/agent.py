@@ -1,0 +1,156 @@
+"""iAgent — the paper's per-model actor-critic network (Fig. 4).
+
+Input (8): [request_rate, cur_res, cur_bs, cur_mt, queue_drops, pre_queue,
+post_queue, slo]. Backbone: 8 -> 64 -> 48 (ReLU). One value head; three
+*cascaded* action heads: the resolution head reads the backbone features, and
+its softmax output is concatenated onto the features for the batch-size and
+multi-threading heads (Faster-R-CNN-style cascade) so inter-action
+dependencies are learnable.
+
+Heterogeneous action spaces (§II-C4) are represented with *masks*: every
+agent's heads are padded to the fleet-maximum dimensions and a per-agent
+boolean mask disables invalid options (masked logits -> -inf). This keeps the
+whole fleet as ONE stacked pytree (vmap/shard_map over the agent axis) while
+agents keep genuinely different action spaces — the JAX-native replacement
+for the paper's per-device LibTorch agents.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.fcpo import FCPOConfig
+
+
+class ActionMask(NamedTuple):
+    """Per-agent valid-action masks (True = allowed)."""
+    res: jnp.ndarray  # (n_res,)
+    bs: jnp.ndarray   # (n_bs,)
+    mt: jnp.ndarray   # (n_mt,)
+
+
+def full_mask(cfg: FCPOConfig) -> ActionMask:
+    return ActionMask(jnp.ones(cfg.n_res, bool), jnp.ones(cfg.n_bs, bool),
+                      jnp.ones(cfg.n_mt, bool))
+
+
+def _linear_init(key, d_in, d_out):
+    k1, k2 = jax.random.split(key)
+    lim = 1.0 / math.sqrt(d_in)
+    return {"w": jax.random.uniform(k1, (d_in, d_out), jnp.float32, -lim, lim),
+            "b": jax.random.uniform(k2, (d_out,), jnp.float32, -lim, lim)}
+
+
+def _linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def agent_init(cfg: FCPOConfig, key) -> Dict:
+    ks = jax.random.split(key, 6)
+    hd = cfg.hidden_dim * cfg.hidden_scale
+    fd = cfg.feat_dim * cfg.hidden_scale
+    p = {
+        "backbone": {
+            "l1": _linear_init(ks[0], cfg.state_dim, hd),
+            "l2": _linear_init(ks[1], hd, fd),
+        },
+        "value": _linear_init(ks[2], fd, 1),
+    }
+    if cfg.single_head:  # Fig. 12 ablation: one joint head over A_res×A_bs×A_mt
+        p["head_res"] = _linear_init(ks[3], fd, cfg.n_res * cfg.n_bs * cfg.n_mt)
+    else:
+        p["head_res"] = _linear_init(ks[3], fd, cfg.n_res)
+        p["head_bs"] = _linear_init(ks[4], fd + cfg.n_res, cfg.n_bs)
+        p["head_mt"] = _linear_init(ks[5], fd + cfg.n_res, cfg.n_mt)
+    return p
+
+
+BACKBONE_KEYS = ("backbone", "value")     # equally-aggregated layers (Alg. 1)
+HEAD_KEYS = ("head_res", "head_bs", "head_mt")  # loss-weighted layers
+
+
+def agent_forward(cfg: FCPOConfig, params, state, mask: ActionMask):
+    """state: (..., 8) -> dict of masked log-probs per head + value."""
+    h = jax.nn.relu(_linear(params["backbone"]["l1"], state))
+    feat = jax.nn.relu(_linear(params["backbone"]["l2"], h))
+    value = _linear(params["value"], feat)[..., 0]
+
+    if cfg.single_head:  # joint factorization for the Fig. 12 ablation
+        joint_mask = (mask.res[..., :, None, None]
+                      & mask.bs[..., None, :, None]
+                      & mask.mt[..., None, None, :]).reshape(
+                          mask.res.shape[:-1] + (-1,))
+        logits = jnp.where(joint_mask, _linear(params["head_res"], feat), -1e30)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        lp = logp.reshape(logp.shape[:-1] + (cfg.n_res, cfg.n_bs, cfg.n_mt))
+        # marginals keep the downstream interface identical
+        return {
+            "res": jax.nn.logsumexp(lp, axis=(-2, -1)),
+            "bs": jax.nn.logsumexp(lp, axis=(-3, -1)),
+            "mt": jax.nn.logsumexp(lp, axis=(-3, -2)),
+            "joint": logp,
+            "value": value,
+        }
+
+    res_logits = jnp.where(mask.res, _linear(params["head_res"], feat), -1e30)
+    res_probs = jax.nn.softmax(res_logits, axis=-1)
+    # cascade: resolution distribution feeds the other two heads
+    feat_c = jnp.concatenate([feat, res_probs], axis=-1)
+    bs_logits = jnp.where(mask.bs, _linear(params["head_bs"], feat_c), -1e30)
+    mt_logits = jnp.where(mask.mt, _linear(params["head_mt"], feat_c), -1e30)
+
+    return {
+        "res": jax.nn.log_softmax(res_logits, axis=-1),
+        "bs": jax.nn.log_softmax(bs_logits, axis=-1),
+        "mt": jax.nn.log_softmax(mt_logits, axis=-1),
+        "value": value,
+    }
+
+
+def sample_actions(cfg: FCPOConfig, params, state, mask: ActionMask, key):
+    """Sample (res, bs, mt) and return (actions (...,3), logp, out-dict)."""
+    out = agent_forward(cfg, params, state, mask)
+    if "joint" in out:
+        aj = jax.random.categorical(key, out["joint"])
+        a_res = aj // (cfg.n_bs * cfg.n_mt)
+        a_bs = (aj // cfg.n_mt) % cfg.n_bs
+        a_mt = aj % cfg.n_mt
+        logp = jnp.take_along_axis(out["joint"], aj[..., None], -1)[..., 0]
+        return jnp.stack([a_res, a_bs, a_mt], axis=-1), logp, out
+    kr, kb, km = jax.random.split(key, 3)
+    a_res = jax.random.categorical(kr, out["res"])
+    a_bs = jax.random.categorical(kb, out["bs"])
+    a_mt = jax.random.categorical(km, out["mt"])
+    logp = (jnp.take_along_axis(out["res"], a_res[..., None], -1)[..., 0]
+            + jnp.take_along_axis(out["bs"], a_bs[..., None], -1)[..., 0]
+            + jnp.take_along_axis(out["mt"], a_mt[..., None], -1)[..., 0])
+    actions = jnp.stack([a_res, a_bs, a_mt], axis=-1)
+    return actions, logp, out
+
+
+def action_logp(cfg: FCPOConfig, params, state, actions, mask: ActionMask):
+    """Log-prob of given actions (...,3) under current params; also value and
+    the concatenated policy distribution (for diversity KL)."""
+    out = agent_forward(cfg, params, state, mask)
+    if "joint" in out:
+        aj = (actions[..., 0] * cfg.n_bs * cfg.n_mt
+              + actions[..., 1] * cfg.n_mt + actions[..., 2])
+        logp = jnp.take_along_axis(out["joint"], aj[..., None], -1)[..., 0]
+    else:
+        logp = (jnp.take_along_axis(out["res"], actions[..., 0:1], -1)[..., 0]
+                + jnp.take_along_axis(out["bs"], actions[..., 1:2], -1)[..., 0]
+                + jnp.take_along_axis(out["mt"], actions[..., 2:3], -1)[..., 0])
+    probs = jnp.concatenate([jnp.exp(out["res"]), jnp.exp(out["bs"]),
+                             jnp.exp(out["mt"])], axis=-1)
+    return logp, out["value"], probs
+
+
+def num_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

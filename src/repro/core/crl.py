@@ -1,0 +1,80 @@
+"""Continual RL driver (§IV-C): episode rollout + gated online update.
+
+``run_episode`` scans ``n_steps`` control intervals: observe -> sample
+cascaded actions -> env step -> diversity-buffer insert. ``crl_episode``
+additionally performs the online update from the episode rollout through the
+loss gate. Everything is a pure function of (params, opt, buffer, env_state,
+rng) so a fleet of agents is just a ``vmap`` over stacked states.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core import env as env_mod
+from repro.core.agent import ActionMask, sample_actions
+from repro.core.buffer import DiversityBuffer, buffer_insert
+from repro.core.ppo import Rollout, agent_update
+
+
+class AgentState(NamedTuple):
+    params: Any
+    opt: Any
+    buffer: DiversityBuffer
+    env_state: env_mod.EnvState
+    rng: jnp.ndarray
+
+
+def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
+                rates: jnp.ndarray, mask: ActionMask
+                ) -> Tuple[AgentState, Rollout, Dict[str, jnp.ndarray]]:
+    """Collect one episode (rates: (n_steps,) arrivals per interval)."""
+
+    def step(carry, rate):
+        est, buf, rng = carry
+        rng, krng = jax.random.split(rng)
+        obs = env_mod.observe(cfg, ep, est, rate)
+        actions, logp, out = sample_actions(cfg, astate.params, obs, mask, krng)
+        est2, reward, info = env_mod.env_step(cfg, ep, est, actions, rate)
+        probs = jnp.concatenate([jnp.exp(out["res"]), jnp.exp(out["bs"]),
+                                 jnp.exp(out["mt"])], axis=-1)
+        buf = buffer_insert(cfg, buf, obs, actions, logp, reward,
+                            out["value"], probs)
+        ys = (obs, actions, logp, reward, out["value"], info)
+        return (est2, buf, rng), ys
+
+    (env_state, buffer, rng), ys = jax.lax.scan(
+        step, (astate.env_state, astate.buffer, astate.rng), rates)
+    obs, actions, logp, rewards, values, infos = ys
+    rollout = Rollout(states=obs, actions=actions, logp_old=logp,
+                      rewards=rewards, values_old=values)
+    metrics = {
+        "reward": rewards.mean(),
+        "throughput": infos["throughput"].mean(),
+        "effective_throughput": infos["effective_throughput"].mean(),
+        "latency": infos["latency"].mean(),
+        "drops": infos["drops"].mean(),
+        "accuracy_proxy": infos["accuracy_proxy"].mean(),
+    }
+    new_state = AgentState(astate.params, astate.opt, buffer, env_state, rng)
+    return new_state, rollout, metrics
+
+
+def crl_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
+                rates: jnp.ndarray, mask: ActionMask, learn: bool = True
+                ) -> Tuple[AgentState, Rollout, Dict[str, jnp.ndarray]]:
+    """Episode + gated online update (the CRL inner loop)."""
+    astate, rollout, metrics = run_episode(cfg, ep, astate, rates, mask)
+    if learn:
+        params, opt, lm = agent_update(cfg, astate.params, astate.opt,
+                                       rollout, mask)
+        astate = astate._replace(params=params, opt=opt)
+        metrics = {**metrics, **lm}
+    else:
+        metrics = {**metrics, "loss": jnp.zeros(()), "l_p": jnp.zeros(()),
+                   "l_v": jnp.zeros(()), "l_pen": jnp.zeros(()),
+                   "gated": jnp.ones(())}
+    return astate, rollout, metrics

@@ -1,0 +1,173 @@
+"""Serving-environment MDP for iAgents (§IV-B), fully tensorial.
+
+Models one inference replica's pipeline: arrivals -> bounded pre-processing
+queue -> batched inference -> bounded post-processing queue -> sink, with:
+
+  * RES action: resolution bucket / frame packing — lower resolution packs
+    ``(1/scale)²`` requests per inference slot and speeds pre-processing;
+  * BS action: inference batch size — classic batching curve
+    ``t_batch = t0 + t1·bs·area`` (throughput up, per-request latency up);
+  * MT action: pre/post concurrency with a contention penalty on constrained
+    devices (threads help until they fight for cores);
+  * bounded queues drop on overflow (drops are in the state vector);
+  * reward Eq. 1 with the oversize penalty increased per SLO violation.
+
+Every quantity is a scalar per agent, so the entire fleet steps as one
+``vmap``'d program; heterogeneity (Jetson NX / AGX / Orin / server GPU →
+their TPU-slice analogues) enters through ``EnvParams`` leaves which are
+stacked per agent. ``LatencyModel.from_roofline`` calibrates t0/t1 from a
+compiled model's cost analysis so the simulator's latency surface matches
+the real data plane (DESIGN.md §2).
+
+One env step = one control interval (1 s in the paper).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.fcpo import FCPOConfig
+
+
+class EnvParams(NamedTuple):
+    """Per-agent device/model characteristics (stack to (A, ...) for fleets)."""
+    t0: jnp.ndarray            # fixed per-batch latency (s) — kernel/launch floor
+    t1: jnp.ndarray            # per-item compute time at full res (s)
+    pre_rate: jnp.ndarray      # pre-proc throughput at 1 thread, full res (req/s)
+    post_rate: jnp.ndarray     # post-proc throughput at 1 thread (req/s)
+    contention: jnp.ndarray    # thread-contention coefficient (0 = free scaling)
+    queue_cap: jnp.ndarray     # bounded queue capacity (requests)
+    slo_s: jnp.ndarray         # end-to-end SLO (s) — also a state input
+    net_lat: jnp.ndarray       # network/base latency offset (s)
+
+
+def default_env_params(speed=1.0, slo_s=0.25) -> EnvParams:
+    f = lambda x: jnp.asarray(x, jnp.float32)
+    speed = f(speed)
+    return EnvParams(
+        t0=0.012 / speed, t1=0.0022 / speed,
+        pre_rate=220.0 * speed, post_rate=260.0 * speed,
+        contention=0.18 / jnp.maximum(speed, 0.25), queue_cap=f(128.0),
+        slo_s=jnp.broadcast_to(f(slo_s), speed.shape), net_lat=jnp.broadcast_to(f(0.015), speed.shape),
+    )
+
+
+class LatencyModel:
+    """Calibrate (t0, t1) from roofline terms of a compiled serving step."""
+
+    @staticmethod
+    def from_roofline(flops_per_item: float, bytes_per_step: float,
+                      peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                      overhead_s: float = 2e-3) -> tuple:
+        t0 = bytes_per_step / hbm_bw + overhead_s   # weight-streaming floor
+        t1 = flops_per_item / peak_flops            # compute per request
+        return t0, t1
+
+
+class EnvState(NamedTuple):
+    pre_q: jnp.ndarray     # requests waiting for pre-processing
+    post_q: jnp.ndarray    # requests waiting for post-processing
+    drops: jnp.ndarray     # drops in the last step
+    cur_action: jnp.ndarray  # (3,) int32 current (res, bs, mt)
+    ema_lat: jnp.ndarray   # weighted average local latency (paper: "lat")
+    t: jnp.ndarray         # step counter
+
+
+def env_init(cfg: FCPOConfig) -> EnvState:
+    return EnvState(
+        pre_q=jnp.zeros(()), post_q=jnp.zeros(()), drops=jnp.zeros(()),
+        cur_action=jnp.zeros((3,), jnp.int32), ema_lat=jnp.zeros(()),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def observe(cfg: FCPOConfig, ep: EnvParams, s: EnvState, rate) -> jnp.ndarray:
+    """The 8-dim state vector of §IV-B."""
+    return jnp.stack([
+        rate / 100.0,
+        s.cur_action[0].astype(jnp.float32) / max(cfg.n_res - 1, 1),
+        s.cur_action[1].astype(jnp.float32) / max(cfg.n_bs - 1, 1),
+        s.cur_action[2].astype(jnp.float32) / max(cfg.n_mt - 1, 1),
+        s.drops / 50.0,
+        s.pre_q / ep.queue_cap,
+        s.post_q / ep.queue_cap,
+        ep.slo_s / 0.5,
+    ])
+
+
+def env_step(cfg: FCPOConfig, ep: EnvParams, s: EnvState, action, rate):
+    """One control interval. action: (3,) int32. rate: arrivals this step.
+
+    Returns (new_state, reward, info)."""
+    res_scale = jnp.asarray(cfg.res_scales)[action[0]]
+    bs = jnp.asarray(cfg.bs_values, jnp.float32)[action[1]]
+    mt = jnp.asarray(cfg.mt_values, jnp.float32)[action[2]]
+
+    area = res_scale ** 2
+    pack = 1.0 / area                      # frames packed per inference slot
+
+    # --- pre-processing: threads scale throughput, contention bites back ---
+    mt_eff = mt * jnp.maximum(1.0 - ep.contention * (mt - 1.0), 0.3)
+    rate_pre = ep.pre_rate * mt_eff / jnp.maximum(area, 0.05)
+
+    pre_in = s.pre_q + rate
+    pre_done = jnp.minimum(pre_in, rate_pre)
+    pre_q = pre_in - pre_done
+    drops_pre = jnp.maximum(pre_q - ep.queue_cap, 0.0)
+    pre_q = jnp.minimum(pre_q, ep.queue_cap)
+
+    # --- batched inference: t_batch = t0 + t1·bs·area; packing multiplies
+    #     requests per slot ---
+    t_batch = ep.t0 + ep.t1 * bs * area
+    rate_inf = (bs * pack) / t_batch       # req/s capacity
+    inf_done = jnp.minimum(pre_done + 0.0, rate_inf)
+    # unprocessed spill returns to the pre queue (bottleneck visibility)
+    spill = pre_done - inf_done
+    pre_q = jnp.minimum(pre_q + spill, ep.queue_cap)
+
+    # --- post-processing ---
+    rate_post = ep.post_rate * mt_eff
+    post_in = s.post_q + inf_done
+    post_done = jnp.minimum(post_in, rate_post)
+    post_q = post_in - post_done
+    drops_post = jnp.maximum(post_q - ep.queue_cap, 0.0)
+    post_q = jnp.minimum(post_q, ep.queue_cap)
+
+    drops = drops_pre + drops_post
+
+    # --- latency estimate: queue wait (Little) + batch fill + service ---
+    wait_pre = pre_q / jnp.maximum(rate_pre, 1.0)
+    wait_fill = 0.5 * bs * pack / jnp.maximum(rate, 1.0)  # first-in-batch wait
+    wait_post = post_q / jnp.maximum(rate_post, 1.0)
+    lat = ep.net_lat + wait_pre + wait_fill + t_batch + wait_post
+    ema_lat = 0.7 * s.ema_lat + 0.3 * lat
+
+    throughput = post_done
+    slo_viol = jnp.where(lat > ep.slo_s, throughput, 0.0)
+    effective = throughput - slo_viol
+
+    # --- reward (Eq. 1): oversize penalty bs grows by SLO violations.
+    # Normalized to (-1, 1) via tanh: a hard clip saturates under bad
+    # configurations (every action looks equally bad -> zero learning
+    # signal); tanh keeps the ordering differentiable while matching the
+    # paper's "normalized between -1 and 1".
+    safe_rate = jnp.maximum(rate, 1.0)
+    r = 0.5 * (cfg.theta * throughput / safe_rate
+               - cfg.sigma * ema_lat
+               - cfg.phi * (bs + slo_viol) / safe_rate)
+    r = jnp.tanh(r)
+
+    new_state = EnvState(pre_q=pre_q, post_q=post_q, drops=drops,
+                         cur_action=action.astype(jnp.int32), ema_lat=ema_lat,
+                         t=s.t + 1)
+    info = {
+        "throughput": throughput,
+        "effective_throughput": effective,
+        "latency": lat,
+        "drops": drops,
+        "accuracy_proxy": res_scale ** 0.3,   # resolution-accuracy trade-off
+        "batch_latency": t_batch,
+    }
+    return new_state, r, info

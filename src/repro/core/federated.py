@@ -1,0 +1,211 @@
+"""Agent-specific Federated RL (§IV-D): Algorithms 1 & 2, Eq. 7 selection,
+hierarchical rounds — expressed over *stacked* fleet pytrees.
+
+The fleet's parameters live in one pytree with a leading agent axis (A, ...),
+sharded over the mesh's ``data`` axis at scale. Algorithm 1 then becomes a
+handful of masked segment-means — no parameter server, no per-agent RPCs —
+which is the JAX-native answer to the paper's §VI scalability concern.
+
+Faithful mapping of Algorithm 1:
+  * backbone + value head: *equal* aggregation over selected clients AND the
+    server's base network, divided by |M|+1 (lines 3-7, 12, 17).
+  * action heads: aggregated only within groups of agents whose head output
+    dimensionality (action-space mask) matches (line 8: "across all agents
+    with the same output dimensions"), weighted by head loss (line 9).
+    The pseudo-code's centered factor ``LOSS_l − LOSS_TOTAL/|M|`` makes the
+    client contributions cancel to zero when losses are equal; we implement
+    the evident intent — lower-loss heads get more weight — via
+    ``w_i = exp(−(loss_i − mean(loss)))`` renormalized to |M_g| (reduces to
+    equal aggregation for equal losses). Deviation documented here and in
+    DESIGN.md.
+  * after aggregation all agents receive the new backbone/value and their
+    group's head (system step ① — helps cold starts), then fine-tune heads
+    locally per Algorithm 2 (``ppo.finetune_heads``).
+
+Client selection (Eq. 7): ``TotalUtil(c) = Util(c)·sqrt(Bandwidth/10)`` with
+FedHybrid-style ``Util`` = memory availability + compute availability + data
+diversity (the buffer's mean diversity score). Stragglers enter as an
+availability mask — a timed-out client simply drops out of this round's
+selection (fault tolerance for free: aggregation is defined for any subset,
+including the empty one, which degenerates to keeping the base network).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.agent import BACKBONE_KEYS, HEAD_KEYS, ActionMask
+from repro.core.ppo import Rollout, action_logp, gae
+
+
+# ---------------------------------------------------------------------------
+# Per-head policy losses (Alg. 1's LOSS_l)
+# ---------------------------------------------------------------------------
+def per_head_losses(cfg: FCPOConfig, params, rollout: Rollout,
+                    mask: ActionMask) -> jnp.ndarray:
+    """(3,) policy-loss per action head on this agent's experiences."""
+    from repro.core.agent import agent_forward  # local import to avoid cycle
+
+    out = agent_forward(cfg, params, rollout.states, mask)
+    adv = gae(cfg, rollout.rewards, rollout.values_old)
+    adv = (adv - adv.mean()) / (adv.std() + 1e-6)
+    factor = -adv + jnp.exp(-rollout.rewards)
+
+    losses = []
+    for i, head in enumerate(("res", "bs", "mt")):
+        logp = jnp.take_along_axis(out[head], rollout.actions[..., i:i + 1],
+                                   -1)[..., 0]
+        ratio = jnp.exp(logp - jax.lax.stop_gradient(logp))  # =1 at eval point
+        l = jnp.mean(jnp.minimum(cfg.eps_clip * ratio, ratio) * factor)
+        losses.append(l)
+    return jnp.stack(losses)
+
+
+# ---------------------------------------------------------------------------
+# Client selection (Eq. 7)
+# ---------------------------------------------------------------------------
+class ClientStats(NamedTuple):
+    mem_avail: jnp.ndarray      # (A,) in [0,1]
+    compute_avail: jnp.ndarray  # (A,) in [0,1]
+    diversity: jnp.ndarray      # (A,) mean buffer diversity score
+    bandwidth: jnp.ndarray      # (A,) Mbit/s
+    available: jnp.ndarray      # (A,) bool — False = straggler/offline
+
+
+def total_utility(stats: ClientStats) -> jnp.ndarray:
+    div = stats.diversity / (1.0 + jnp.abs(stats.diversity))  # squash
+    util = (stats.mem_avail + stats.compute_avail + div) / 3.0
+    return util * jnp.sqrt(jnp.maximum(stats.bandwidth, 1e-3) / 10.0)
+
+
+def select_clients(cfg: FCPOConfig, stats: ClientStats) -> jnp.ndarray:
+    """Top-⌈frac·A⌉ by TotalUtil among available clients -> (A,) bool mask.
+    Exactly k are chosen (argsort tie-break), minus any unavailable."""
+    a = stats.available.shape[0]
+    k = max(1, int(round(cfg.clients_per_round * a)))
+    utils = jnp.where(stats.available, total_utility(stats), -jnp.inf)
+    order = jnp.argsort(-utils)
+    sel = jnp.zeros((a,), bool).at[order[:k]].set(True)
+    return sel & stats.available
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — agent-specific aggregation over stacked fleets
+# ---------------------------------------------------------------------------
+def _masked_mean_with_base(stacked, base, sel, pod_ids, n_pods):
+    """(base + Σ_sel m) / (n_sel + 1), per pod segment.
+
+    stacked: (A, ...); base: (P, ...); sel: (A,) bool; pod_ids: (A,) int.
+    Returns (per-agent broadcast (A, ...), new base (P, ...)).
+    """
+    w = sel.astype(stacked.dtype)
+    wsum = jax.ops.segment_sum(w, pod_ids, n_pods)                 # (P,)
+    ssum = jax.ops.segment_sum(stacked * w.reshape((-1,) + (1,) * (stacked.ndim - 1)),
+                               pod_ids, n_pods)                    # (P, ...)
+    denom = (wsum + 1.0).reshape((n_pods,) + (1,) * (stacked.ndim - 1))
+    agg = (base + ssum) / denom                                    # (P, ...)
+    return agg[pod_ids], agg
+
+
+def _head_weights(sel, losses_h, group_ids, n_groups):
+    """Loss-centered exponential weights, renormalized within (pod×group)."""
+    w = sel.astype(jnp.float32)
+    cnt = jax.ops.segment_sum(w, group_ids, n_groups)
+    lsum = jax.ops.segment_sum(losses_h * w, group_ids, n_groups)
+    mean_l = lsum / jnp.maximum(cnt, 1.0)
+    raw = jnp.exp(-(losses_h - mean_l[group_ids])) * w
+    rsum = jax.ops.segment_sum(raw, group_ids, n_groups)
+    # renormalize so weights sum to the group count (equal-loss ⇒ all 1)
+    return raw * (cnt / jnp.maximum(rsum, 1e-9))[group_ids]
+
+
+def aggregate(cfg: FCPOConfig, fleet_params, base_params, sel: jnp.ndarray,
+              head_losses: jnp.ndarray, head_groups: Dict[str, jnp.ndarray],
+              pod_ids: Optional[jnp.ndarray] = None, n_pods: int = 1
+              ) -> Tuple[Any, Any]:
+    """Run Algorithm 1. Returns (new_fleet_params, new_base_params).
+
+    fleet_params: stacked (A, ...); base_params: (P, ...) per-pod base
+    networks; head_losses: (A, 3); head_groups: per head key -> (A,) int32
+    group ids (agents sharing an action-space signature); pod_ids: (A,).
+    """
+    a = sel.shape[0]
+    if pod_ids is None:
+        pod_ids = jnp.zeros((a,), jnp.int32)
+
+    new_fleet = {}
+    new_base = {}
+
+    # --- backbone + value: equal aggregation (lines 3-7, 12) ---
+    for key in BACKBONE_KEYS:
+        out = jax.tree.map(
+            lambda st, b: _masked_mean_with_base(st, b, sel, pod_ids, n_pods),
+            fleet_params[key], base_params[key])
+        new_fleet[key] = jax.tree.map(lambda t: t[0], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        new_base[key] = jax.tree.map(lambda t: t[1], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+
+    # --- action heads: loss-weighted within (pod × output-dim group) ---
+    for h_idx, key in enumerate(HEAD_KEYS):
+        if key not in fleet_params:  # single-head ablation variant
+            continue
+        groups = head_groups[key]                          # (A,) int32
+        n_groups_local = int(head_groups[f"{key}_count"])
+        seg = pod_ids * n_groups_local + groups            # pod×group segments
+        n_seg = n_pods * n_groups_local
+        wts = _head_weights(sel, head_losses[:, h_idx], seg, n_seg)
+
+        def agg_leaf(st, b):
+            wshape = (-1,) + (1,) * (st.ndim - 1)
+            ssum = jax.ops.segment_sum(st * wts.reshape(wshape), seg, n_seg)
+            cnt = jax.ops.segment_sum(sel.astype(jnp.float32), seg, n_seg)
+            # base head is per pod; broadcast to every group in that pod
+            b_seg = jnp.repeat(b, n_groups_local, axis=0)
+            denom = (cnt + 1.0).reshape((n_seg,) + (1,) * (st.ndim - 1))
+            agg = (b_seg + ssum) / denom                    # (n_seg, ...)
+            per_agent = agg[seg]
+            # groups with no contributor keep the agent's own head
+            has = (cnt[seg] > 0).reshape(wshape)
+            per_agent = jnp.where(has, per_agent, st)
+            # new base per pod: mean over that pod's groups
+            nb = agg.reshape((n_pods, n_groups_local) + st.shape[1:]).mean(1)
+            return per_agent, nb
+
+        out = jax.tree.map(agg_leaf, fleet_params[key], base_params[key])
+        new_fleet[key] = jax.tree.map(lambda t: t[0], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        new_base[key] = jax.tree.map(lambda t: t[1], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+
+    return new_fleet, new_base
+
+
+def merge_pods(base_params):
+    """Hierarchical FL (§IV-D Large-Scale): cross-cluster exchange through
+    the cloud — pods' base networks are averaged and redistributed."""
+    def mix(b):
+        return jnp.broadcast_to(b.mean(0, keepdims=True), b.shape)
+    return jax.tree.map(mix, base_params)
+
+
+def head_group_ids(masks_stacked: ActionMask) -> Dict[str, Any]:
+    """Group agents by identical action-space masks, per head.
+
+    masks_stacked: ActionMask of (A, n_*) bool arrays. Returns {head_key:
+    (A,) int32, head_key+"_count": int} — computed on host (static fleet
+    topology), used as constants inside jit.
+    """
+    import numpy as np
+
+    out: Dict[str, Any] = {}
+    for key, m in zip(HEAD_KEYS, (masks_stacked.res, masks_stacked.bs,
+                                  masks_stacked.mt)):
+        m = np.asarray(m)
+        uniq, inv = np.unique(m, axis=0, return_inverse=True)
+        out[key] = jnp.asarray(inv.astype(np.int32))
+        out[f"{key}_count"] = int(uniq.shape[0])
+    return out

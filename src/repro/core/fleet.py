@@ -1,0 +1,193 @@
+"""Fleet driver: the full FCPO loop over a fleet of iAgents.
+
+One fleet = stacked agent pytrees (A on the leading axis) + stacked env
+params/states + per-pod base networks. The CRL inner loop is ``vmap``'d;
+the FL round is Algorithm 1 over the stacked axis. Under the production
+mesh the agent axis is sharded over ``data`` (and ``pod`` maps to the FL
+hierarchy), making the entire federated-continual system one SPMD program.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core import env as env_mod
+from repro.core import federated as fed
+from repro.core.agent import ActionMask, agent_init, full_mask
+from repro.core.buffer import buffer_init
+from repro.core.crl import AgentState, crl_episode
+from repro.core.ppo import agent_opt_init, finetune_heads
+
+
+@jax.tree_util.register_pytree_node_class
+class Fleet:
+    """Stacked fleet state. ``n_pods`` and the head-group *counts* are static
+    (pytree aux data); everything else is traced leaves."""
+
+    FIELDS = ("astate", "base_params", "env_params", "masks", "group_ids",
+              "pod_ids", "bandwidth", "speeds", "episode")
+
+    def __init__(self, astate, base_params, env_params, masks, group_ids,
+                 pod_ids, bandwidth, speeds, episode, *, n_pods,
+                 group_counts):
+        self.astate: AgentState = astate
+        self.base_params = base_params
+        self.env_params: env_mod.EnvParams = env_params
+        self.masks: ActionMask = masks
+        self.group_ids: Dict[str, jnp.ndarray] = group_ids  # per head key
+        self.pod_ids = pod_ids
+        self.bandwidth = bandwidth
+        self.speeds = speeds
+        self.episode = episode
+        self.n_pods: int = n_pods
+        self.group_counts: Dict[str, int] = group_counts
+
+    @property
+    def head_groups(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = dict(self.group_ids)
+        for k, v in self.group_counts.items():
+            out[f"{k}_count"] = v
+        return out
+
+    def _replace(self, **kw) -> "Fleet":
+        vals = {f: getattr(self, f) for f in self.FIELDS}
+        vals.update(kw)
+        return Fleet(**vals, n_pods=self.n_pods, group_counts=self.group_counts)
+
+    def tree_flatten(self):
+        leaves = tuple(getattr(self, f) for f in self.FIELDS)
+        aux = (self.n_pods, tuple(sorted(self.group_counts.items())))
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        n_pods, gc = aux
+        return cls(*leaves, n_pods=n_pods, group_counts=dict(gc))
+
+
+def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
+               masks: Optional[ActionMask] = None,
+               speeds: Optional[jnp.ndarray] = None,
+               bandwidth: Optional[jnp.ndarray] = None,
+               slo_s: Optional[float] = None) -> Fleet:
+    kp, kb, ke, kr = jax.random.split(key, 4)
+    agent_keys = jax.random.split(kp, n_agents)
+    params = jax.vmap(lambda k: agent_init(cfg, k))(agent_keys)
+    opt = jax.vmap(agent_opt_init)(params)
+    buffers = jax.vmap(lambda _: buffer_init(cfg))(jnp.arange(n_agents))
+    env_states = jax.vmap(lambda _: env_mod.env_init(cfg))(jnp.arange(n_agents))
+    rngs = jax.random.split(kr, n_agents)
+
+    if speeds is None:  # heterogeneous device mix (Orin/NX/AGX/server-like)
+        speeds = jnp.asarray(
+            np.random.default_rng(0).choice([0.5, 0.75, 1.0, 2.0], n_agents))
+    if bandwidth is None:
+        bandwidth = jnp.asarray(
+            np.random.default_rng(1).uniform(2.0, 40.0, n_agents))
+    env_params = jax.vmap(lambda s: env_mod.default_env_params(
+        s, cfg.slo_s if slo_s is None else slo_s))(speeds)
+
+    if masks is None:
+        masks = jax.tree.map(lambda m: jnp.broadcast_to(m, (n_agents,) + m.shape),
+                             full_mask(cfg))
+    hg = fed.head_group_ids(masks)
+    group_ids = {k: v for k, v in hg.items() if not k.endswith("_count")}
+    group_counts = {k[:-len("_count")]: v for k, v in hg.items()
+                    if k.endswith("_count")}
+    pod_ids = jnp.asarray(np.arange(n_agents) % n_pods, jnp.int32)
+
+    base = agent_init(cfg, kb)
+    base_params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_pods,) + x.shape), base)
+
+    astate = AgentState(params=params, opt=opt, buffer=buffers,
+                        env_state=env_states, rng=rngs)
+    return Fleet(astate, base_params, env_params, masks, group_ids,
+                 pod_ids, bandwidth, speeds, jnp.zeros((), jnp.int32),
+                 n_pods=n_pods, group_counts=group_counts)
+
+
+@partial(jax.jit, static_argnums=0, static_argnames=("learn",))
+def fleet_episode(cfg: FCPOConfig, fleet: Fleet, rates: jnp.ndarray,
+                  learn: bool = True):
+    """One CRL episode for all agents. rates: (A, n_steps).
+    Returns (fleet, rollouts, metrics)."""
+    astate, rollouts, metrics = jax.vmap(
+        lambda ep, st, r, m: crl_episode(cfg, ep, st, r, m, learn)
+    )(fleet.env_params, fleet.astate, rates, fleet.masks)
+    fleet = fleet._replace(astate=astate, episode=fleet.episode + 1)
+    return fleet, rollouts, metrics
+
+
+@partial(jax.jit, static_argnums=0)
+def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None):
+    """One federated round: Eq. 7 selection -> Alg. 1 aggregation ->
+    Alg. 2 head fine-tuning. ``available`` masks out stragglers/offline
+    agents (fault tolerance)."""
+    a = fleet.pod_ids.shape[0]
+    if available is None:
+        available = jnp.ones((a,), bool)
+
+    div = jnp.where(fleet.astate.buffer.filled, fleet.astate.buffer.score,
+                    0.0).mean(-1)
+    stats = fed.ClientStats(
+        mem_avail=jnp.clip(1.0 - fleet.astate.env_state.pre_q
+                           / fleet.env_params.queue_cap, 0, 1),
+        compute_avail=jnp.clip(fleet.speeds / 2.0, 0, 1),
+        diversity=div,
+        bandwidth=fleet.bandwidth,
+        available=available,
+    )
+    sel = fed.select_clients(cfg, stats)
+
+    head_losses = jax.vmap(
+        lambda p, r, m: fed.per_head_losses(cfg, p, r, m)
+    )(fleet.astate.params, rollouts, fleet.masks)
+
+    new_params, new_base = fed.aggregate(
+        cfg, fleet.astate.params, fleet.base_params, sel, head_losses,
+        fleet.head_groups, fleet.pod_ids, fleet.n_pods)
+
+    # Algorithm 2: local action-head fine-tuning on local experiences
+    params, opt = jax.vmap(
+        lambda p, o, r, m: finetune_heads(cfg, p, o, r, m)
+    )(new_params, fleet.astate.opt, rollouts, fleet.masks)
+
+    astate = fleet.astate._replace(params=params, opt=opt)
+    return fleet._replace(astate=astate, base_params=new_base), sel
+
+
+@partial(jax.jit, static_argnums=0)
+def pod_merge(cfg: FCPOConfig, fleet: Fleet):
+    """Hierarchical cross-pod exchange (cloud tier)."""
+    return fleet._replace(base_params=fed.merge_pods(fleet.base_params))
+
+
+def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
+                learn: bool = True, federated: bool = True,
+                straggler_prob: float = 0.0, seed: int = 0):
+    """Run episodes over ``traces`` (A, total_steps); FL every ``fl_every``
+    episodes; cross-pod merge every ``hierarchical_period`` rounds.
+    Returns (fleet, history dict of per-episode metric arrays)."""
+    a, total = traces.shape
+    n_eps = total // cfg.n_steps
+    rng = np.random.default_rng(seed)
+    history: Dict[str, list] = {}
+    rounds = 0
+    for e in range(n_eps):
+        rates = traces[:, e * cfg.n_steps:(e + 1) * cfg.n_steps]
+        fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates, learn=learn)
+        if federated and learn and (e + 1) % cfg.fl_every == 0:
+            avail = jnp.asarray(rng.random(a) >= straggler_prob)
+            fleet, _ = fl_round(cfg, fleet, rollouts, avail)
+            rounds += 1
+            if rounds % cfg.hierarchical_period == 0 and fleet.n_pods > 1:
+                fleet = pod_merge(cfg, fleet)
+        for k, v in metrics.items():
+            history.setdefault(k, []).append(np.asarray(v).mean())
+    return fleet, {k: np.asarray(v) for k, v in history.items()}

@@ -1,0 +1,89 @@
+"""Token/batch pipeline: deterministic synthetic streams for training and
+serving (offline container — no external corpora).
+
+Sequences are Zipf-distributed token streams with Markov locality so the
+loss surface is non-trivial (a model must learn bigram structure to beat the
+unigram floor); hubert gets frame embeddings + mask spans; pixtral gets
+patch embeddings ahead of text. The pipeline is an infinite iterator of
+ready-to-jit batches with a fixed host->device layout.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def _zipf_probs(vocab: int, alpha: float = 1.1) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return (p / p.sum()).astype(np.float64)
+
+
+class TokenPipeline:
+    """Markov-Zipf synthetic LM stream."""
+
+    def __init__(self, cfg: ArchConfig, batch: int, seq: int, seed: int = 0,
+                 locality: float = 0.3):
+        self.cfg = cfg
+        self.batch, self.seq = batch, seq
+        self.rng = np.random.default_rng(seed)
+        self.probs = _zipf_probs(min(cfg.vocab_size, 65536))
+        self.vocab = len(self.probs)
+        self.locality = locality
+
+    def _sample_tokens(self, n) -> np.ndarray:
+        flat = self.rng.choice(self.vocab, size=n, p=self.probs)
+        # Markov locality: with prob `locality`, repeat/shift the previous token
+        rep = self.rng.random(n) < self.locality
+        shifted = np.roll(flat, 1)
+        flat = np.where(rep, (shifted + 1) % self.vocab, flat)
+        return flat.astype(np.int32)
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        b, s = self.batch, self.seq
+        batch: Dict[str, jnp.ndarray] = {}
+        if cfg.frontend == "frames":
+            emb = self.rng.standard_normal((b, s, cfg.frontend_dim)).astype(np.float32)
+            mask = self.rng.random((b, s)) < 0.15
+            # span masking (hubert masks ~10-frame spans)
+            for _ in range(2):
+                mask |= np.roll(mask, 1, axis=1)
+            labels = self._sample_tokens(b * s).reshape(b, s) % cfg.vocab_size
+            batch = {"embeds": jnp.asarray(emb), "mask": jnp.asarray(mask),
+                     "labels": jnp.asarray(labels)}
+            return batch
+        toks = self._sample_tokens(b * s).reshape(b, s) % self.cfg.vocab_size
+        batch["tokens"] = jnp.asarray(toks)
+        batch["labels"] = jnp.asarray(toks)
+        if cfg.frontend == "patches":
+            patches = self.rng.standard_normal(
+                (b, cfg.n_patches, cfg.frontend_dim)).astype(np.float32)
+            batch["patches"] = jnp.asarray(patches)
+        return batch
+
+
+def request_stream(cfg: ArchConfig, rate_trace, max_len: int = 64,
+                   seed: int = 0):
+    """Serving request generator: at step t yields ~rate_trace[t] requests of
+    random prompt lengths (video-frame analogue for the LM data plane)."""
+    rng = np.random.default_rng(seed)
+    probs = _zipf_probs(min(cfg.vocab_size, 8192))
+    rid = 0
+    for rate in np.asarray(rate_trace):
+        n = rng.poisson(max(rate, 0.0))
+        reqs = []
+        for _ in range(int(n)):
+            ln = int(rng.integers(4, max_len))
+            toks = rng.choice(len(probs), size=ln, p=probs).astype(np.int32)
+            reqs.append((rid, toks))
+            rid += 1
+        yield reqs

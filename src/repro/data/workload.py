@@ -1,0 +1,91 @@
+"""Workload (arrival-rate) trace generation — the video-stream analogue.
+
+Traces model the paper's content dynamics (Fig. 2a): a base request rate per
+stream (15 FPS × objects-per-frame), slow diurnal drift, scene-dependent
+regimes that switch on context changes (road construction, camera pans), and
+short bursts. ``switching_traces`` produces the Fig. 13-style concatenation
+of 5-minute segments from different sources; ``ood_traces`` produces the
+Fig. 10 out-of-distribution switch (AI-City-style different rate statistics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def smooth_noise(key, n, scale=1.0, corr=0.9):
+    """AR(1) noise — smooth rate wander."""
+    eps = jax.random.normal(key, (n,)) * scale
+
+    def step(carry, e):
+        x = corr * carry + (1 - corr) * e
+        return x, x
+
+    _, xs = jax.lax.scan(step, 0.0, eps)
+    return xs
+
+
+def make_trace(key, n_steps: int, base_rate: float = 30.0,
+               regime_period: int = 120, regime_scale: float = 0.5,
+               burst_prob: float = 0.02, burst_scale: float = 3.0):
+    """One stream's arrival-rate trace (requests per control interval)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    t = jnp.arange(n_steps)
+    # scene regimes: piecewise-constant multipliers
+    n_regimes = n_steps // regime_period + 1
+    regime_mult = 1.0 + regime_scale * (
+        jax.random.uniform(k1, (n_regimes,)) * 2 - 1)
+    regimes = regime_mult[t // regime_period]
+    # diurnal-ish slow sine
+    slow = 1.0 + 0.25 * jnp.sin(2 * jnp.pi * t / max(n_steps, 1) * 2.0)
+    # AR noise
+    noise = 1.0 + smooth_noise(k2, n_steps, scale=0.4)
+    # bursts (event spikes)
+    bursts = jnp.where(jax.random.uniform(k3, (n_steps,)) < burst_prob,
+                       burst_scale, 1.0)
+    rate = base_rate * regimes * slow * noise * bursts
+    return jnp.clip(rate, 1.0, 400.0)
+
+
+def fleet_traces(key, n_agents: int, n_steps: int, base_rate: float = 30.0,
+                 heterogeneity: float = 0.5, **trace_kw):
+    """(A, n_steps) traces with per-agent base rates (workload heterogeneity).
+    Extra kwargs flow to ``make_trace`` (regime/burst dynamics)."""
+    kb, kt = jax.random.split(key)
+    bases = base_rate * (1.0 + heterogeneity * (
+        jax.random.uniform(kb, (n_agents,)) * 2 - 1))
+    keys = jax.random.split(kt, n_agents)
+    return jax.vmap(lambda k, b: make_trace(k, n_steps, b, **trace_kw))(keys, bases)
+
+
+# Fig. 2a-grade content dynamics (3-10x swings): used by the fig7/9/10
+# benchmarks so runtime conditions genuinely differ from profiling data.
+DYNAMIC = dict(regime_scale=0.9, burst_prob=0.05, burst_scale=4.0)
+# Narrow profiling distribution (what an offline-trained agent sees).
+PROFILING = dict(regime_scale=0.05, burst_prob=0.0)
+
+
+def switching_traces(key, n_agents: int, n_steps: int, segment: int = 60,
+                     base_rates=(15.0, 45.0, 90.0)):
+    """Fig. 13: concatenated segments from drastically different sources.
+    Every ``segment`` steps the underlying distribution switches."""
+    rates = jnp.asarray(base_rates)
+    k1, k2 = jax.random.split(key)
+    n_seg = n_steps // segment + 1
+    seg_src = jax.random.randint(k1, (n_agents, n_seg), 0, len(base_rates))
+    t = jnp.arange(n_steps)
+    base = rates[seg_src[:, t // segment]]                  # (A, n_steps)
+    keys = jax.random.split(k2, n_agents)
+    noise = jax.vmap(lambda k: 1.0 + smooth_noise(k, n_steps, 0.3))(keys)
+    return jnp.clip(base * noise, 1.0, 400.0)
+
+
+def ood_traces(key, n_agents: int, n_steps: int):
+    """Fig. 10: out-of-distribution workload (different rate stats + burst
+    structure, AI-City-style 10 FPS vehicle-tracking)."""
+    kb, kt = jax.random.split(key)
+    bases = 60.0 * (1.0 + 0.8 * (jax.random.uniform(kb, (n_agents,)) * 2 - 1))
+    keys = jax.random.split(kt, n_agents)
+    return jax.vmap(lambda k, b: make_trace(
+        k, n_steps, b, regime_period=30, regime_scale=1.0,
+        burst_prob=0.08, burst_scale=2.0))(keys, bases)

@@ -1,0 +1,43 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (Pallas
+interpreter — same kernel body, Python/XLA-CPU execution); on TPU the same
+call sites compile to Mosaic. ``REPRO_PALLAS_INTERPRET=0`` flips to compiled
+mode. The model code defaults to the jnp reference path under dry-run
+(identical math — see DESIGN.md §6) and switches to these via
+``use_pallas=True``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import packing as _pack
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k_cache, v_cache, kv_len, *, bk=512):
+    return _dec.decode_attention(q, k_cache, v_cache, kv_len, bk=bk,
+                                 interpret=_interpret_default())
+
+
+@jax.jit
+def pack(tokens, indices):
+    return _pack.pack(tokens, indices, interpret=_interpret_default())

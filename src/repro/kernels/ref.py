@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D). Returns (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len):
+    """q: (B, 1, Hq, D); caches: (B, S_max, Hkv, D); kv_len: () or (B,).
+
+    Single-query attention over the valid prefix of the cache."""
+    b, _, hq, d = q.shape
+    s_max, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    k = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+    v = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    valid = jnp.arange(s_max)[None, :] < jnp.asarray(kv_len).reshape(-1, 1)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def pack_ref(tokens, indices):
+    """tokens: (T, D); indices: (N,) int32 (negative = padding slot -> 0).
+
+    The frame/token-packing gather: out[i] = tokens[indices[i]] or 0."""
+    safe = jnp.clip(indices, 0, tokens.shape[0] - 1)
+    out = tokens[safe]
+    return jnp.where((indices >= 0)[:, None], out, 0).astype(tokens.dtype)

@@ -1,0 +1,25 @@
+"""Production mesh builders (functions, not module constants — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12      # per chip, FLOP/s
+HBM_BW = 819e9                # per chip, B/s
+ICI_BW = 50e9                 # per link, B/s
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (possibly fake) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)

@@ -1,0 +1,112 @@
+"""Multi-head Latent Attention (MLA), DeepSeek-V2 style.
+
+Two execution paths:
+  * prefill/train: naive path (decompress c_kv -> k,v per head).
+  * decode: *absorbed* path — queries are projected into the 512-d latent
+    space so attention runs directly against the compressed cache
+    (c_kv, k_rope). This is what makes the MLA decode cache ~7x smaller
+    than GQA and is the efficient serving path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init, apply_rope
+
+
+def mla_init(key, cfg: ArchConfig, dtype):
+    kq, ka, kb, ko = jax.random.split(key, 4)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * qk_dim, dtype),
+        "wkv_a": dense_init(ka, cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkv_b": dense_init(kb, cfg.kv_lora_rank,
+                            cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim), dtype),
+        "wo": dense_init(ko, cfg.n_heads * cfg.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def _project_q(p, cfg, x, positions):
+    b, s, _ = x.shape
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, qk_dim)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    kv_a = dense(p["wkv_a"], x)
+    c_kv = rmsnorm(p["kv_norm"], kv_a[..., : cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank:].reshape(b, s, 1, cfg.qk_rope_dim)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]  # (B,S,rope_dim)
+    return c_kv, k_rope
+
+
+def mla_apply(p, cfg: ArchConfig, x, positions, cache=None, use_pallas=False):
+    """Returns (out, new_cache_entries)."""
+    b, s, _ = x.shape
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv, k_rope = _compress_kv(p, cfg, x, positions)
+
+    if cache is None:
+        # Naive path: decompress and run standard attention.
+        kv = dense(p["wkv_b"], c_kv).reshape(
+            b, s, cfg.n_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+        k_nope, v = kv[..., : cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim:]
+        k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                    (b, s, cfg.n_heads, cfg.qk_rope_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        qpos = jnp.arange(s)
+        mask = qpos[:, None] >= qpos[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        new_cache = None
+    else:
+        # Absorbed decode path against the compressed cache.
+        offset = cache["offset"]
+        c_all = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, offset, 0))
+        r_all = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, offset, 0))
+        kv_len = offset + s
+        w_b = p["wkv_b"]["w"].reshape(cfg.kv_lora_rank, cfg.n_heads,
+                                      cfg.qk_nope_dim + cfg.v_head_dim)
+        w_uk = w_b[..., : cfg.qk_nope_dim]   # (r, H, nope)
+        w_uv = w_b[..., cfg.qk_nope_dim:]    # (r, H, v)
+        # absorb W_uk into q: (B,S,H,nope) x (r,H,nope) -> (B,S,H,r)
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk.astype(q_nope.dtype))
+        scores = jnp.einsum("bshr,bkr->bhsk", q_lat, c_all.astype(q_lat.dtype))
+        scores = scores + jnp.einsum("bshd,bkd->bhsk", q_rope,
+                                     r_all.astype(q_rope.dtype))
+        scores = scores.astype(jnp.float32) * scale
+        kpos = jnp.arange(c_all.shape[1])
+        qpos = offset + jnp.arange(s)
+        causal = kpos[None, :] <= qpos[:, None]            # (S, S_max)
+        valid = (kpos[None, :] < kv_len) & causal          # causal + cache-validity
+        scores = jnp.where(valid[None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhsk,bkr->bshr", probs, c_all.astype(probs.dtype))
+        out = jnp.einsum("bshr,rhd->bshd", ctx, w_uv.astype(ctx.dtype))
+        new_cache = {"c_kv": c_all, "k_rope": r_all}
+
+    out = out.reshape(b, s, cfg.n_heads * cfg.v_head_dim)
+    return dense(p["wo"], out), new_cache
+
+
+def mla_cache_spec(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16):
+    """Shapes of the per-layer compressed cache."""
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim), dtype),
+    }

@@ -1,0 +1,234 @@
+"""Hybrid (Zamba2) and xLSTM model assemblies.
+
+Zamba2: a Mamba2 backbone with a single *weight-shared* attention+MLP
+transformer block invoked every ``attn_every`` layers (the Zamba signature).
+Mamba layers are stacked and scanned in groups of ``attn_every`` so the
+shared block sits between scanned groups.
+
+xLSTM: alternating mLSTM / sLSTM blocks (1:7 ratio via ``slstm_every``);
+12 small layers — unrolled (no scan needed at this depth).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm
+from repro.models.layers import (attention_apply, attention_init, dense,
+                                 dense_init, embed, embedding_init, mlp,
+                                 mlp_init, rmsnorm, rmsnorm_init, unembed)
+
+
+# ===========================================================================
+# Zamba2
+# ===========================================================================
+def _mamba_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": ssm.mamba2_init(k1, cfg, dtype)}
+
+
+def zamba2_init(cfg: ArchConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl, ka, km = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    p: Dict[str, Any] = {
+        "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba": jax.vmap(partial(_mamba_block_init, cfg=cfg, dtype=dtype))(layer_keys),
+        "shared": {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attention_init(ka, cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        },
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    return p  # embeddings tied
+
+
+def _zamba_groups(cfg: ArchConfig):
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    trailing = cfg.n_layers % g
+    return g, n_groups, trailing
+
+
+def zamba2_apply(cfg: ArchConfig, params, batch, cache=None, use_pallas=False,
+                 remat=False):
+    x = embed(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.dtype))
+    b, s = x.shape[:2]
+    g, n_groups, trailing = _zamba_groups(cfg)
+
+    if cache is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+        offset = None
+    else:
+        offset = cache["offset"]
+        positions = jnp.arange(s, dtype=jnp.int32) + offset
+
+    def split(tree, lo, hi, group=None):
+        def f(a):
+            sl = a[lo:hi]
+            if group is not None:
+                sl = sl.reshape((group, (hi - lo) // group) + a.shape[1:])
+            return sl
+        return jax.tree.map(f, tree)
+
+    main_p = split(params["mamba"], 0, n_groups * g, n_groups)
+    tail_p = split(params["mamba"], n_groups * g, cfg.n_layers)
+    if cache is not None:
+        main_c = split(cache["mamba"], 0, n_groups * g, n_groups)
+        tail_c = split(cache["mamba"], n_groups * g, cfg.n_layers)
+        attn_c = cache["attn"]  # stacked (n_groups, ...)
+    else:
+        main_c = tail_c = attn_c = None
+
+    shared = params["shared"]
+
+    def mamba_body(h, pc):
+        pl, cl = pc
+        y, new_state = ssm.mamba2_apply(pl["mamba"], cfg,
+                                        rmsnorm(pl["ln"], h, cfg.norm_eps), cl)
+        return h + y, new_state
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def _layer_loop(h, stack_p, stack_c, n):
+        """scan or unrolled python loop over a stacked mamba group."""
+        if cfg.scan_layers:
+            return jax.lax.scan(mamba_body, h, (stack_p, stack_c))
+        states = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda a: a[i], stack_p)
+            c_i = (None if stack_c is None
+                   else jax.tree.map(lambda a: a[i], stack_c))
+            h, st = mamba_body(h, (p_i, c_i))
+            states.append(st)
+        stacked = (None if stack_c is None
+                   else jax.tree.map(lambda *xs: jnp.stack(xs), *states))
+        return h, stacked
+
+    def group_body(h, inp):
+        grp_p, grp_c, a_c = inp
+        h, new_states = _layer_loop(h, grp_p, grp_c, g)
+        if a_c is not None:
+            a_c = dict(a_c, offset=offset)
+        a, new_kv = attention_apply(shared["attn"], cfg,
+                                    rmsnorm(shared["ln1"], h, cfg.norm_eps),
+                                    positions, a_c, use_pallas=use_pallas)
+        h = h + a
+        h = h + mlp(shared["mlp"], rmsnorm(shared["ln2"], h, cfg.norm_eps), cfg.act)
+        return h, (new_states, new_kv)
+
+    if cfg.scan_layers:
+        x, (new_mamba_main, new_attn) = jax.lax.scan(
+            group_body, x, (main_p, main_c, attn_c))
+    else:
+        mains, attns = [], []
+        for gi in range(n_groups):
+            pick = lambda t: (None if t is None
+                              else jax.tree.map(lambda a: a[gi], t))
+            x, (st, kv) = group_body(x, (pick(main_p), pick(main_c),
+                                         pick(attn_c)))
+            mains.append(st)
+            attns.append(kv)
+        new_mamba_main = (None if main_c is None
+                          else jax.tree.map(lambda *xs: jnp.stack(xs), *mains))
+        new_attn = (None if attn_c is None
+                    else jax.tree.map(lambda *xs: jnp.stack(xs), *attns))
+    new_mamba_tail = None
+    if trailing:
+        x, new_mamba_tail = _layer_loop(x, tail_p, tail_c, trailing)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+
+    new_cache = None
+    if cache is not None:
+        flat_main = jax.tree.map(
+            lambda a: a.reshape((n_groups * g,) + a.shape[2:]), new_mamba_main)
+        if trailing:
+            new_mamba = jax.tree.map(lambda a, t: jnp.concatenate([a, t], 0),
+                                     flat_main, new_mamba_tail)
+        else:
+            new_mamba = flat_main
+        new_cache = {"mamba": new_mamba, "attn": new_attn, "offset": offset + s}
+    return logits, new_cache, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def zamba2_cache_spec(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16):
+    g, n_groups, _ = _zamba_groups(cfg)
+    m = ssm.mamba2_cache_spec(cfg, batch, dtype)
+
+    def stack_l(sds, n):
+        return jax.ShapeDtypeStruct((n,) + sds.shape, sds.dtype)
+
+    kv = {
+        "k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    return {
+        "mamba": jax.tree.map(lambda s: stack_l(s, cfg.n_layers), m),
+        "attn": jax.tree.map(lambda s: stack_l(s, n_groups), kv),
+        "offset": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ===========================================================================
+# xLSTM
+# ===========================================================================
+def _xlstm_kinds(cfg: ArchConfig):
+    return ["slstm" if (cfg.slstm_every and i % cfg.slstm_every == 0) else "mlstm"
+            for i in range(cfg.n_layers)]
+
+
+def xlstm_init(cfg: ArchConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kh, kl = jax.random.split(key, 3)
+    blocks = []
+    for i, (kind, bk) in enumerate(zip(_xlstm_kinds(cfg),
+                                       jax.random.split(kl, cfg.n_layers))):
+        init = ssm.slstm_init if kind == "slstm" else ssm.mlstm_init
+        blocks.append({"ln": rmsnorm_init(cfg.d_model, dtype),
+                       "cell": init(bk, cfg, dtype)})
+    return {
+        "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def xlstm_apply(cfg: ArchConfig, params, batch, cache=None, use_pallas=False,
+                remat=False):
+    x = embed(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.dtype))
+    kinds = _xlstm_kinds(cfg)
+    new_layers = []
+    for i, (kind, bp) in enumerate(zip(kinds, params["blocks"])):
+        cl = None if cache is None else cache["layers"][i]
+        h = rmsnorm(bp["ln"], x, cfg.norm_eps)
+        if kind == "slstm":
+            y, st = ssm.slstm_apply(bp["cell"], cfg, h, cl)
+        else:
+            y, st = ssm.mlstm_apply(bp["cell"], cfg, h, cl)
+        x = x + y
+        new_layers.append(st)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = dense(params["lm_head"], x)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": new_layers, "offset": cache["offset"] + x.shape[1]}
+    return logits, new_cache, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def xlstm_cache_spec(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16):
+    layers = []
+    for kind in _xlstm_kinds(cfg):
+        spec = (ssm.slstm_cache_spec if kind == "slstm" else ssm.mlstm_cache_spec)
+        layers.append(spec(cfg, batch))
+    return {"layers": layers, "offset": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,295 @@
+"""Core functional layers: norms, RoPE, embeddings, MLPs, GQA attention.
+
+Pure-functional style: ``*_init(key, ...) -> params`` and ``*_apply(params,
+x, ...) -> y``. Params are plain nested dicts of jnp arrays so they stay
+trivially pjit-shardable and checkpointable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d, dtype):
+    return {"g": jnp.zeros((d,), dtype)}  # stored as (1 + g), gemma-style
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["g"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, dtype, gated=True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+    if gated:
+        p["up"] = dense_init(k2, d_model, d_ff, dtype)
+    return p
+
+
+def _activate(x, act):
+    if act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def mlp(p, x, act="silu"):
+    h = _activate(dense(p["gate"], x), act)
+    if "up" in p:
+        h = h * dense(p["up"], x)
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / heads
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab, d_model, dtype):
+    # 1/sqrt(d) keeps tied-unembedding logits O(1); archs with
+    # ``embed_scale`` (gemma) multiply the residual stream back to O(1) norm.
+    return {"table": _normal(key, (vocab, d_model), d_model ** -0.5, dtype)}
+
+
+def embed(p, tokens, scale=None):
+    y = jnp.take(p["table"], tokens, axis=0)
+    if scale is not None:
+        y = y * jnp.asarray(scale, y.dtype)
+    return y
+
+
+def unembed(p, x):
+    return x @ p["table"].T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA), reference jnp path + optional Pallas dispatch
+# ---------------------------------------------------------------------------
+def attention_init(key, cfg: ArchConfig, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.q_dim, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, cfg.d_model, cfg.kv_dim, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, cfg.d_model, cfg.kv_dim, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.q_dim, cfg.d_model, dtype),
+    }
+
+
+def repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def sdpa(q, k, v, *, causal, q_offset=0, kv_len=None, softcap=0.0,
+         gqa_impl="repeat"):
+    """Reference scaled-dot-product attention.
+
+    q: (B, Sq, Hq, D), k/v: (B, Sk, Hkv, D).  ``kv_len`` masks cache slots
+    beyond the valid length (decode).  ``q_offset`` is the absolute position
+    of q[0] for causal masking against a longer kv.  ``gqa_impl="grouped"``
+    contracts the shared kv heads directly instead of materializing them G×
+    (the decode memory-term optimization; identical math).
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    if gqa_impl == "grouped" and g > 1:
+        qg = q.reshape(b, sq, hkv, g, d)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+        expand = lambda m: m[:, None, None, :, :]
+    else:
+        k = repeat_kv(k, g)
+        v = repeat_kv(v, g)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        expand = lambda m: m[:, None, :, :]
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    mask = None
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = jnp.broadcast_to(qpos[:, None] >= kpos[None, :], (1, sq, sk))
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < jnp.asarray(kv_len).reshape(-1, 1)  # (B, Sk)
+        vmask = valid[:, None, :]
+        mask = vmask if mask is None else (mask & vmask)
+    if mask is not None:
+        logits = jnp.where(expand(mask), logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    if gqa_impl == "grouped" and g > 1:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        return out.reshape(b, sq, hq, d)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def sdpa_chunked(q, k, v, *, causal, chunk=1024, unroll=True):
+    """Flash-style streaming attention: identical math to ``sdpa`` but the
+    (Sq, Sk) score matrix never materializes — KV is consumed in ``chunk``-
+    sized blocks with a running (max, denom, acc) online softmax. This is the
+    jnp twin of kernels/flash_attention.py and the §Perf "memory term"
+    optimization for the train/prefill shapes (the O(S²) temp disappears).
+
+    ``unroll=True`` keeps every block in the HLO so cost_analysis stays exact
+    (XLA:CPU counts scan bodies once).
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+    scale = 1.0 / math.sqrt(d)
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0
+    nk = sk // chunk
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3)            # (B,H,Sq,D)
+    kc = k.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b, hq, nk, chunk, d)
+    vc = v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b, hq, nk, chunk, d)
+    qpos = jnp.arange(sq)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ki, vi, ik = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, ki) * scale       # (B,H,Sq,C)
+        if causal:
+            kpos = ik * chunk + jnp.arange(chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        if causal:
+            p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhqk,bhkd->bhqd", p, vi)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hq, sq, 1), -1e30, jnp.float32),
+            jnp.zeros((b, hq, sq, 1), jnp.float32),
+            jnp.zeros((b, hq, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+         jnp.arange(nk)),
+        unroll=nk if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention_apply(p, cfg: ArchConfig, x, positions, cache=None, layer_idx=None,
+                    use_pallas=False):
+    """Full attention with optional KV cache (decode).
+
+    cache: None for train/prefill-without-cache, or a dict
+      {"k": (B, S_max, Hkv, D), "v": ..., } plus caller-managed offset.
+    Returns (out, new_kv) where new_kv is (k, v) written at the offset.
+    """
+    b, s, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.shard_activations:
+        # Pin batch->data, heads->model (when divisible), and KEEP head_dim /
+        # kv replicated: stops GSPMD from sharding the score contraction dim,
+        # which otherwise all-reduces fp32 (B,H,Sq,Sk) partial sums (§Perf).
+        from repro.distributed.sharding import BATCH, shard_hint
+        q = shard_hint(q, list(BATCH), [], ["model"], [])
+        k = shard_hint(k, list(BATCH), [], ["model"], [])
+        v = shard_hint(v, list(BATCH), [], ["model"], [])
+
+    if cache is None:
+        if use_pallas:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=cfg.causal)
+        elif cfg.attn_impl == "chunked":
+            out = sdpa_chunked(q, k, v, causal=cfg.causal,
+                               chunk=cfg.attn_chunk)
+        else:
+            out = sdpa(q, k, v, causal=cfg.causal, softcap=cfg.logit_softcap,
+                       gqa_impl=cfg.gqa_impl)
+        new_kv = None
+    else:
+        offset = cache["offset"]  # scalar int32: number of valid tokens already in cache
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, offset, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, offset, 0, 0))
+        kv_len = offset + s
+        if use_pallas and s == 1:
+            from repro.kernels import ops as kops
+            out = kops.decode_attention(q, ck, cv, kv_len)
+        else:
+            out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True,
+                       q_offset=offset, kv_len=kv_len, softcap=cfg.logit_softcap,
+                       gqa_impl=cfg.gqa_impl)
+        new_kv = {"k": ck, "v": cv}
+    out = out.reshape(b, s, cfg.q_dim)
+    return dense(p["wo"], out), new_kv

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts layer (granite top-8/40e, deepseek 64e top-6 + shared).
+
+Dispatch is sort-based with a static per-expert capacity: tokens are routed
+to (expert, slot) coordinates via argsort over expert ids, scattered into an
+(E, C, d) buffer, processed with one batched einsum per projection, and
+scatter-added back with their gate weights. This keeps FLOPs at
+2*E*C*d*ff (≈ 2*T*k*d*ff*capacity_factor) and avoids the O(T*E*C) one-hot
+dispatch matmuls that blow up the memory-roofline term at 1M-token batches.
+
+Expert tensors are stacked on a leading E axis so expert parallelism is a
+plain NamedSharding on that axis when E divides the mesh's model axis
+(deepseek: 64/16 ✓); otherwise the sharder falls back to tensor-parallel
+experts over the ff dim (granite: 40 experts, ff 512/16 ✓).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _activate, _normal, dense, dense_init, mlp, mlp_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(kr, d, e, dtype, scale=scale),
+        "gate": _normal(kg, (e, d, f), scale, dtype),
+        "up": _normal(ku, (e, d, f), scale, dtype),
+        "down": _normal(kd, (e, f, d), 1.0 / math.sqrt(f), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks, d, cfg.moe_d_ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    cap = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, ((cap + 7) // 8) * 8)  # pad to multiple of 8 for layout
+
+
+def moe_apply(p, cfg: ArchConfig, x):
+    """x: (B, S, d) -> (B, S, d). Returns (y, aux) with load-balance aux loss."""
+    b, s, d = x.shape
+    if cfg.moe_impl == "batched" and b > 1:
+        # per-row dispatch: batch stays data-sharded end to end (zero
+        # cross-data traffic; capacity is per row — device-local capacity,
+        # as real EP systems provision it)
+        y, aux = jax.vmap(lambda row: _moe_tokens(p, cfg, row))(
+            x.reshape(b, s, d))
+        if cfg.n_shared_experts:
+            y = y + mlp(p["shared"], x, cfg.act)
+        return y, aux.mean()
+    y, aux = _moe_tokens(p, cfg, x.reshape(b * s, d))
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x.reshape(b * s, d), cfg.act)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_tokens(p, cfg: ArchConfig, xf):
+    """Core dispatch/compute/combine over a flat token axis. xf: (T, d)."""
+    t, d = xf.shape
+    k, e = cfg.top_k, cfg.n_experts
+
+    logits = dense(p["router"], xf).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)  # (T, k)
+    topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)  # renormalize
+    topw = topw.astype(xf.dtype)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    cap = moe_capacity(cfg, t)
+    flat_e = topi.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)        # slots sorted by expert
+    sorted_e = flat_e[order]
+    token_of = order // k                           # originating token per slot
+    # position of each slot within its expert's contiguous run
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - seg_start.astype(jnp.int32)
+    keep = pos_in_e < cap                           # capacity drop mask
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # overflow -> OOB
+
+    buf = jnp.zeros((e * cap, d), xf.dtype)
+    buf = buf.at[slot].set(xf[token_of], mode="drop")
+    buf = buf.reshape(e, cap, d)
+    if cfg.shard_activations and cfg.moe_impl != "batched":
+        # Pin the capacity buffer: experts->model when divisible, else the
+        # capacity dim rides data. Stops GSPMD replicating the full (E,C,d)
+        # buffer per device and all-reducing partial scatters (§Perf).
+        from repro.distributed.sharding import shard_hint
+        buf = shard_hint(buf, ["model"], ["data"], [])
+
+    # ---- expert computation (batched over E) --------------------------------
+    h = _activate(jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(xf.dtype)),
+                  cfg.act)
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(xf.dtype))
+    if cfg.shard_activations and cfg.moe_impl != "batched":
+        # 2D-sharded expert compute: capacity rides data, ff rides model —
+        # no full-buffer gather; the down-proj contraction psums over model.
+        from repro.distributed.sharding import shard_hint
+        h = shard_hint(h, ["model"], ["data"], ["model"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(xf.dtype))
+    if cfg.shard_activations and cfg.moe_impl != "batched":
+        out = shard_hint(out, ["model"], ["data"], [])
+
+    # ---- combine -------------------------------------------------------------
+    gathered = out.reshape(e * cap, d)[jnp.clip(slot, 0, e * cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w_slot = topw.reshape(-1)[order][:, None]
+    y = jnp.zeros((t, d), xf.dtype).at[token_of].add(gathered * w_slot)
+
+    # Switch-style load-balance auxiliary loss.
+    me = probs.mean(0)                                      # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    return y, aux

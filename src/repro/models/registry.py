@@ -1,0 +1,74 @@
+"""Architecture registry: id -> (config, init, apply, cache_spec, input_specs).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input of that (arch, shape) cell — weak-type-correct, shardable, and never
+allocated — the dry-run pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchConfig, InputShape, SHAPES,  # noqa: F401
+                                get_config, list_archs, register)
+from repro.models import hybrid, transformer
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    apply: Callable[..., Any]          # (params, batch, cache=None, ...) -> (logits, cache, aux)
+    cache_spec: Callable[..., Any]     # (batch, max_len, dtype) -> pytree of SDS
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "hybrid":
+        return Model(cfg,
+                     lambda key: hybrid.zamba2_init(cfg, key),
+                     lambda p, b, cache=None, **kw: hybrid.zamba2_apply(cfg, p, b, cache, **kw),
+                     lambda batch, max_len, dtype=jnp.bfloat16:
+                         hybrid.zamba2_cache_spec(cfg, batch, max_len, dtype))
+    if cfg.family == "ssm":
+        return Model(cfg,
+                     lambda key: hybrid.xlstm_init(cfg, key),
+                     lambda p, b, cache=None, **kw: hybrid.xlstm_apply(cfg, p, b, cache, **kw),
+                     lambda batch, max_len, dtype=jnp.bfloat16:
+                         hybrid.xlstm_cache_spec(cfg, batch, max_len, dtype))
+    # dense / moe / encoder / vlm all share the transformer assembly
+    return Model(cfg,
+                 lambda key: transformer.transformer_init(cfg, key),
+                 lambda p, b, cache=None, **kw: transformer.transformer_apply(cfg, p, b, cache, **kw),
+                 lambda batch, max_len, dtype=jnp.bfloat16:
+                     transformer.transformer_cache_spec(cfg, batch, max_len, dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one grid cell."""
+    b = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    act_dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if cfg.frontend == "frames":
+            batch = {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.frontend_dim), act_dt)}
+        return batch
+
+    if cfg.frontend == "frames":  # hubert: precomputed frame embeddings (stub frontend)
+        batch = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), act_dt)}
+        if shape.kind == "train":
+            batch["mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if cfg.frontend == "patches":  # pixtral: precomputed patch embeddings (stub ViT)
+        batch["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.frontend_dim), act_dt)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return batch
+
+

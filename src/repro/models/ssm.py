@@ -1,0 +1,404 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Each block exposes a chunkwise-parallel training/prefill form (matmul-heavy,
+MXU-friendly) and an O(1)-per-token recurrent decode form with an explicit
+state cache — the latter is what makes the ``long_500k`` decode shape
+runnable for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _normal, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# ===========================================================================
+# Mamba2 (scalar-A SSD, n_groups = 1)
+# ===========================================================================
+def mamba2_init(key, cfg: ArchConfig, dtype):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    kin, kout, kconv, kdt = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": dense_init(kin, d, 2 * di + 2 * n + h, dtype),
+        "conv_w": _normal(kconv, (cfg.d_conv, conv_ch), 1.0 / math.sqrt(cfg.d_conv), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),          # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((h,), math.log(math.e - 1), jnp.float32),  # softplus->1
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(kout, di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C) depthwise causal conv, width K. w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _split_mamba(p, cfg, u):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    zxbcdt = dense(p["in_proj"], u)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def mamba2_apply(p, cfg: ArchConfig, u, cache=None):
+    """u: (B, S, d). cache: None or {"h": (B,H,P,N), "conv": (B,K-1,C)}."""
+    if cache is not None and u.shape[1] == 1:
+        return _mamba2_step(p, cfg, u, cache)
+    y, final_state, conv_tail = _mamba2_chunked(p, cfg, u, return_state=cache is not None)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": final_state, "conv": conv_tail.astype(cache["conv"].dtype)}
+    return y, new_cache
+
+
+def _mamba2_chunked(p, cfg: ArchConfig, u, return_state=False):
+    b, s, _ = u.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    hd = cfg.ssm_head_dim
+    cl = min(cfg.ssm_chunk, s)
+    if s % cl:  # pad to a chunk multiple; tail output is sliced off below.
+        assert not return_state, "prefill-with-state requires chunk-multiple seq"
+        pad = cl - s % cl
+        out, _, _ = _mamba2_chunked(
+            p, cfg, jnp.pad(u, ((0, 0), (0, pad), (0, 0))), False)
+        return out[:, :s], None, None
+    nc = s // cl
+
+    z, xbc_raw, dt = _split_mamba(p, cfg, u)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"].astype(u.dtype),
+                                   p["conv_b"].astype(u.dtype)))
+    x = xbc[..., :di].reshape(b, s, h, hd)
+    B = xbc[..., di : di + n]
+    C = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,S,H)
+    a = (-jnp.exp(p["A_log"]))[None, None, :] * dt                     # (B,S,H) <= 0
+
+    xr = (x.astype(jnp.float32) * dt[..., None]).reshape(b, nc, cl, h, hd)
+    Br = B.astype(jnp.float32).reshape(b, nc, cl, n)
+    Cr = C.astype(jnp.float32).reshape(b, nc, cl, n)
+    ar = a.reshape(b, nc, cl, h)
+    a_cum = jnp.cumsum(ar, axis=2)                                     # (b,nc,L,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    lmat = jnp.exp(a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :])  # (b,nc,L,S,H)
+    tri = jnp.tril(jnp.ones((cl, cl), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], lmat, 0.0)
+    cb = jnp.einsum("bcln,bcsn->bcls", Cr, Br)
+    y_intra = jnp.einsum("bcls,bclsh,bcshp->bclhp", cb, lmat, xr)
+
+    # ---- inter-chunk state passing ----
+    decay_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)                   # (b,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Br, decay_end, xr)   # (b,nc,H,P,N)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                          # (b,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                                  # (b,H,P,N), (b,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry
+
+    init = jnp.zeros((b, h, hd, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)                 # (b,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cr, jnp.exp(a_cum), prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, hd)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(u.dtype)
+
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y)
+    if not return_state:
+        return out, None, None
+    conv_tail = xbc_raw[:, s - (cfg.d_conv - 1):, :]  # last K-1 pre-conv inputs
+    return out, final_state, conv_tail
+
+
+def _mamba2_step(p, cfg: ArchConfig, u, cache):
+    """Single-token recurrent decode. u: (B, 1, d)."""
+    b = u.shape[0]
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_mamba(p, cfg, u)
+    # conv over the cached window
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)                # (B, K, C)
+    xbc1 = jax.nn.silu(jnp.einsum("bkc,kc->bc", win,
+                                  p["conv_w"].astype(u.dtype)) + p["conv_b"].astype(u.dtype))
+    new_conv = win[:, 1:, :]
+    x = xbc1[:, :di].reshape(b, h, hd).astype(jnp.float32)
+    B = xbc1[:, di : di + n].astype(jnp.float32)
+    C = xbc1[:, di + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    decay = jnp.exp((-jnp.exp(p["A_log"]))[None] * dt)                 # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x, B)
+    hstate = cache["h"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C, hstate) + p["D"][None, :, None] * x
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out_proj"], y), {"h": hstate, "conv": new_conv}
+
+
+def mamba2_cache_spec(cfg: ArchConfig, batch, dtype=jnp.bfloat16):
+    h, hd, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * n
+    return {
+        "h": jax.ShapeDtypeStruct((batch, h, hd, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, conv_ch), dtype),
+    }
+
+
+# ===========================================================================
+# xLSTM — mLSTM (matrix memory) and sLSTM (scalar memory)
+# ===========================================================================
+def mlstm_init(key, cfg: ArchConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wi": dense_init(ks[3], d, h, dtype, bias=True),
+        "wf": dense_init(ks[4], d, h, dtype, bias=True),
+        "wo_gate": dense_init(ks[5], d, d, dtype),
+        "norm": rmsnorm_init(d, dtype),
+        "out_proj": dense_init(ks[6], d, d, dtype),
+    }
+
+
+def mlstm_apply(p, cfg: ArchConfig, x, cache=None):
+    if cache is not None and x.shape[1] == 1:
+        return _mlstm_step(p, cfg, x, cache)
+    if cache is not None:
+        # prefill with state handoff: pad to a chunk multiple if needed
+        out, (c, n, m) = _mlstm_chunkwise(p, cfg, x, return_state=True)
+        return out, {"C": c, "n": n, "m": m}
+    if x.shape[1] > cfg.ssm_chunk:
+        return _mlstm_chunkwise(p, cfg, x), None
+    return _mlstm_parallel(p, cfg, x), None
+
+
+def _mlstm_parallel(p, cfg: ArchConfig, x):
+    """Stabilized quadratic parallel form (xLSTM paper, eqs. 23-27)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    q = dense(p["wq"], x).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = dense(p["wk"], x).reshape(b, s, h, dh).transpose(0, 2, 1, 3) / math.sqrt(dh)
+    v = dense(p["wv"], x).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    ig = dense(p["wi"], x).astype(jnp.float32).transpose(0, 2, 1)       # (B,H,S)
+    fg = jax.nn.log_sigmoid(dense(p["wf"], x).astype(jnp.float32)).transpose(0, 2, 1)
+
+    fcum = jnp.cumsum(fg, axis=-1)                                      # (B,H,S)
+    # logD[i,j] = fcum[i] - fcum[j] + ig[j], lower-triangular
+    logd = fcum[..., :, None] - fcum[..., None, :] + ig[..., None, :]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    logd = jnp.where(tri[None, None], logd, -jnp.inf)
+    m = jnp.max(logd, axis=-1, keepdims=True)                           # (B,H,S,1)
+    m = jnp.maximum(m, -1e30)
+    dmat = jnp.exp(logd - m)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dmat
+    norm = jnp.maximum(jnp.abs(scores.sum(-1, keepdims=True)), jnp.exp(-m))
+    hout = jnp.einsum("bhqk,bhkd->bhqd", scores / norm, v.astype(jnp.float32))
+    hout = hout.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    hout = rmsnorm(p["norm"], hout, cfg.norm_eps)
+    hout = hout * jax.nn.silu(dense(p["wo_gate"], x))
+    return dense(p["out_proj"], hout)
+
+
+def _mlstm_chunkwise(p, cfg: ArchConfig, x, return_state=False):
+    """Chunkwise-parallel mLSTM: quadratic only within chunks, matrix state
+    (C, n, m) carried across chunks. Matches ``_mlstm_parallel`` (tested) but
+    keeps the gate matrix at O(S*L) instead of O(S^2) — required for the
+    32k-prefill / 4k-train shapes.
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    cl = min(cfg.ssm_chunk, s)
+    if s % cl:  # pad to a chunk multiple; tail output is sliced off below.
+        assert not return_state, "prefill-with-state requires chunk-multiple seq"
+        pad = cl - s % cl
+        out = _mlstm_chunkwise(p, cfg, jnp.pad(x, ((0, 0), (0, pad), (0, 0))), False)
+        return out[:, :s]
+    nc = s // cl
+
+    q = dense(p["wq"], x).reshape(b, s, h, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+    k = (dense(p["wk"], x).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+         / math.sqrt(dh)).astype(jnp.float32)
+    v = dense(p["wv"], x).reshape(b, s, h, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+    ig = dense(p["wi"], x).astype(jnp.float32).transpose(0, 2, 1)
+    fg = jax.nn.log_sigmoid(dense(p["wf"], x).astype(jnp.float32)).transpose(0, 2, 1)
+
+    # chunked views: (B,H,nc,L,...)
+    qc = q.reshape(b, h, nc, cl, dh)
+    kc = k.reshape(b, h, nc, cl, dh)
+    vc = v.reshape(b, h, nc, cl, dh)
+    igc = ig.reshape(b, h, nc, cl)
+    fgc = fg.reshape(b, h, nc, cl)
+    lcum = jnp.cumsum(fgc, axis=-1)                    # inclusive decay-from-start
+    lsum = lcum[..., -1]                               # (B,H,nc)
+
+    tri = jnp.tril(jnp.ones((cl, cl), bool))
+    # intra-chunk log decays: logd[i,j] = lcum[i] - lcum[j] + ig[j]
+    logd = lcum[..., :, None] - lcum[..., None, :] + igc[..., None, :]
+    logd = jnp.where(tri[None, None, None], logd, -jnp.inf)
+    m_intra = jnp.max(logd, axis=-1)                   # (B,H,nc,L)
+    # state-update log weights: w[j] = lsum - lcum[j] + ig[j]
+    logw = lsum[..., None] - lcum + igc                # (B,H,nc,L)
+    m_w = jnp.max(logw, axis=-1)                       # (B,H,nc)
+
+    # All heavy einsums run BATCHED over chunks (MXU-friendly, and visible to
+    # cost_analysis); the scan only carries the cheap (C, n, m) recurrence.
+    w_add = jnp.exp(logw - m_w[..., None])             # (B,H,nc,L)
+    add_c = jnp.einsum("bhcl,bhcld,bhclp->bhcdp", w_add, kc, vc)
+    add_n = jnp.einsum("bhcl,bhcld->bhcd", w_add, kc)
+
+    def chunk_step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        lsum_i, m_w_i, add_c_i, add_n_i = inp
+        m_new = jnp.maximum(lsum_i + m_prev, m_w_i)
+        decay = jnp.exp(lsum_i + m_prev - m_new)
+        sc = jnp.exp(m_w_i - m_new)
+        c_new = c_prev * decay[..., None, None] + sc[..., None, None] * add_c_i
+        n_new = n_prev * decay[..., None] + sc[..., None] * add_n_i
+        return (c_new, n_new, m_new), (c_prev, n_prev, m_prev)
+
+    init = (jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    xs = (lsum.transpose(2, 0, 1), m_w.transpose(2, 0, 1),
+          add_c.transpose(2, 0, 1, 3, 4), add_n.transpose(2, 0, 1, 3))
+    final, (c_prevs, n_prevs, m_prevs) = jax.lax.scan(chunk_step, init, xs)
+    c_prev = c_prevs.transpose(1, 2, 0, 3, 4)          # (B,H,nc,dh,dh)
+    n_prev = n_prevs.transpose(1, 2, 0, 3)             # (B,H,nc,dh)
+    m_prev = m_prevs.transpose(1, 2, 0)                # (B,H,nc)
+
+    # per-query stabilizer and both contributions, batched over chunks
+    m_inter = lcum + m_prev[..., None]                 # (B,H,nc,L)
+    m_i = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+    dec_in = jnp.exp(m_inter - m_i)                    # (B,H,nc,L)
+    h_inter = jnp.einsum("bhcld,bhcdp->bhclp", qc, c_prev) * dec_in[..., None]
+    n_inter = jnp.einsum("bhcld,bhcd->bhcl", qc, n_prev) * dec_in
+    dmat = jnp.exp(logd - m_i[..., None])              # (B,H,nc,L,L)
+    scores = jnp.einsum("bhcld,bhcsd->bhcls", qc, kc) * dmat
+    h_intra = jnp.einsum("bhcls,bhcsp->bhclp", scores, vc)
+    n_intra = scores.sum(-1)
+    denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_i))[..., None]
+    hs = (h_inter + h_intra) / denom                   # (B,H,nc,L,dh)
+    hout = hs.reshape(b, h, s, dh)
+    hout = hout.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    hout = rmsnorm(p["norm"], hout, cfg.norm_eps)
+    hout = hout * jax.nn.silu(dense(p["wo_gate"], x))
+    out = dense(p["out_proj"], hout)
+    if return_state:
+        return out, final
+    return out
+
+
+def _mlstm_step(p, cfg: ArchConfig, x, cache):
+    """Recurrent decode: C <- f C + i v k^T. cache: C (B,H,P,P), n (B,H,P), m (B,H)."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    q = dense(p["wq"], x).reshape(b, h, dh).astype(jnp.float32)
+    k = (dense(p["wk"], x).reshape(b, h, dh) / math.sqrt(dh)).astype(jnp.float32)
+    v = dense(p["wv"], x).reshape(b, h, dh).astype(jnp.float32)
+    ig = dense(p["wi"], x).astype(jnp.float32).reshape(b, h)
+    fg = jax.nn.log_sigmoid(dense(p["wf"], x).astype(jnp.float32)).reshape(b, h)
+
+    m_new = jnp.maximum(fg + cache["m"], ig)
+    f_sc = jnp.exp(fg + cache["m"] - m_new)[..., None]
+    i_sc = jnp.exp(ig - m_new)[..., None]
+    # state convention matches the chunkwise form: C[d, p] = sum_j k_d v_p
+    c_new = cache["C"] * f_sc[..., None] + i_sc[..., None] * k[..., :, None] * v[..., None, :]
+    n_new = cache["n"] * f_sc + i_sc * k
+    num = jnp.einsum("bhdp,bhd->bhp", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n_new, q)),
+                      jnp.exp(-m_new))[..., None]
+    hout = (num / den).reshape(b, 1, d).astype(x.dtype)
+    hout = rmsnorm(p["norm"], hout, cfg.norm_eps)
+    hout = hout * jax.nn.silu(dense(p["wo_gate"], x))
+    return dense(p["out_proj"], hout), {"C": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_cache_spec(cfg: ArchConfig, batch):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return {
+        "C": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+    }
+
+
+def slstm_init(key, cfg: ArchConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    # input projections for 4 gates + head-block-diagonal recurrent weights
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dtype, bias=True),
+        "r": _normal(ks[1], (4, h, dh, dh), 1.0 / math.sqrt(dh), dtype),
+        "norm": rmsnorm_init(d, dtype),
+        "out_proj": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_apply(p, cfg: ArchConfig, x, cache=None):
+    """sLSTM with exponential gating + stabilizer; lax.scan over time.
+
+    cache: {"c","n","h" (B,H,dh), "m" (B,H,dh)} or None (zeros).
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    wx = dense(p["w_in"], x).reshape(b, s, 4, h, dh).astype(jnp.float32)
+    r = p["r"].astype(jnp.float32)
+
+    if cache is None:
+        zeros = jnp.zeros((b, h, dh), jnp.float32)
+        state = {"c": zeros, "n": zeros + 1e-6, "h": zeros, "m": zeros}
+    else:
+        state = cache
+
+    def step(st, wxt):  # wxt: (B, 4, H, dh)
+        rec = jnp.einsum("bhq,ghpq->bghp", st["h"], r)                 # (B,4,H,dh)
+        g = wxt + rec
+        zt = jnp.tanh(g[:, 0])
+        it = g[:, 1]
+        ft = g[:, 2]
+        ot = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + st["m"], it)
+        i_sc = jnp.exp(it - m_new)
+        f_sc = jnp.exp(jax.nn.log_sigmoid(ft) + st["m"] - m_new)
+        c_new = f_sc * st["c"] + i_sc * zt
+        n_new = f_sc * st["n"] + i_sc
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+    final, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3, 4))
+    hout = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    hout = rmsnorm(p["norm"], hout, cfg.norm_eps)
+    out = dense(p["out_proj"], hout)
+    return out, (final if cache is not None else None)
+
+
+def slstm_cache_spec(cfg: ArchConfig, batch):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = jax.ShapeDtypeStruct((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}

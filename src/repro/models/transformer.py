@@ -1,0 +1,204 @@
+"""Transformer assembly for the dense / moe / encoder / vlm families.
+
+Layers are *stacked* (leading layer axis) and driven by ``lax.scan`` so that
+48-layer models compile in O(1) layer-count time — essential for the 512-
+device dry-run on this host. Param pytrees therefore carry a leading ``L``
+dim; sharding rules prepend ``None`` for it.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as mla
+from repro.models import moe as moe_mod
+from repro.models.layers import (attention_apply, attention_init, dense,
+                                 dense_init, embed, embedding_init, mlp,
+                                 mlp_init, rmsnorm, rmsnorm_init, unembed)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _block_init(key, cfg: ArchConfig, dtype, moe: bool):
+    ka, km = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.use_mla:
+        p["attn"] = mla.mla_init(ka, cfg, dtype)
+    else:
+        p["attn"] = attention_init(ka, cfg, dtype)
+    if moe:
+        p["moe"] = moe_mod.moe_init(km, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(km, cfg.d_model, cfg.d_ff, dtype, gated=cfg.mlp_gated)
+    return p
+
+
+def _block_apply(p, cfg: ArchConfig, x, positions, cache, use_pallas, moe: bool):
+    if cfg.use_mla:
+        a, new_kv = mla.mla_apply(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                  positions, cache)
+    else:
+        a, new_kv = attention_apply(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                    positions, cache, use_pallas=use_pallas)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+    else:
+        m, aux = mlp(p["mlp"], h, cfg.act), 0.0
+    return x + m, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+def transformer_init(cfg: ArchConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+    n_stack = cfg.n_layers - cfg.first_dense_layers
+    p: Dict[str, Any] = {
+        "embed": embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    moe = cfg.n_experts > 0
+    layer_keys = jax.random.split(keys[1], n_stack)
+    p["blocks"] = jax.vmap(partial(_block_init, cfg=cfg, dtype=dtype, moe=moe))(layer_keys)
+    if cfg.first_dense_layers:
+        fkeys = jax.random.split(keys[2], cfg.first_dense_layers)
+        p["first_blocks"] = [
+            _block_init(fk, cfg.replace(d_ff=cfg.d_ff), dtype, moe=False)
+            for fk in fkeys
+        ]
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[3], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend == "patches":
+        p["patch_proj"] = dense_init(keys[4], cfg.frontend_dim, cfg.d_model, dtype)
+    if cfg.frontend == "frames":
+        p["frame_proj"] = dense_init(keys[4], cfg.frontend_dim, cfg.d_model, dtype)
+        p["mask_embed"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ArchConfig, batch):
+    scale = float(cfg.d_model) ** 0.5 if cfg.embed_scale else None
+    if cfg.frontend == "frames":
+        x = dense(params["frame_proj"], batch["embeds"].astype(jnp.dtype(cfg.dtype)))
+        if "mask" in batch:  # HuBERT-style masked prediction
+            m = batch["mask"][..., None].astype(x.dtype)
+            x = x * (1 - m) + params["mask_embed"].astype(x.dtype) * m
+        return x
+    x = embed(params["embed"], batch["tokens"], scale)
+    x = x.astype(jnp.dtype(cfg.dtype))
+    if cfg.frontend == "patches" and "patches" in batch:
+        pe = dense(params["patch_proj"], batch["patches"].astype(x.dtype))
+        n_p = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, n_p:]], axis=1)
+    return x
+
+
+def transformer_apply(cfg: ArchConfig, params, batch, cache=None, use_pallas=False,
+                      remat=False):
+    """Returns (logits, new_cache, aux_dict)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s = x.shape[:2]
+    moe = cfg.n_experts > 0
+
+    if cache is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+        offset = None
+    else:
+        offset = cache["offset"]
+        positions = jnp.arange(s, dtype=jnp.int32) + offset
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_first = []
+    for i in range(cfg.first_dense_layers):
+        fc = None if cache is None else dict(cache["first"][i], offset=offset)
+        x, kv, _ = _block_apply(params["first_blocks"][i], cfg, x, positions, fc,
+                                use_pallas, moe=False)
+        new_first.append(kv)
+
+    def body(carry, pl_cl):
+        h, aux = carry
+        pl, cl = pl_cl
+        if cl is not None:
+            cl = dict(cl, offset=offset)
+        h, kv, a = _block_apply(pl, cfg, h, positions, cl, use_pallas, moe=moe)
+        return (h, aux + a), kv
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    stacked_cache = None if cache is None else cache["layers"]
+    if cfg.scan_layers:
+        (x, aux_total), new_kv = jax.lax.scan(body, (x, aux_total),
+                                              (params["blocks"], stacked_cache))
+    else:  # unrolled lowering (exact cost_analysis; slower compile)
+        n_stack = cfg.n_layers - cfg.first_dense_layers
+        kvs = []
+        for i in range(n_stack):
+            pl_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            cl_i = (None if stacked_cache is None
+                    else jax.tree.map(lambda a: a[i], stacked_cache))
+            (x, aux_total), kv_i = body((x, aux_total), (pl_i, cl_i))
+            kvs.append(kv_i)
+        new_kv = (None if stacked_cache is None
+                  else jax.tree.map(lambda *xs: jnp.stack(xs), *kvs))
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.shard_activations:
+        # Keep activations batch-sharded through the unembed so GSPMD
+        # all-gathers the small FSDP table shards, not (B,S,·) activations.
+        from repro.distributed.sharding import BATCH, shard_hint
+        x = shard_hint(x, list(BATCH))
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x)
+    if cfg.shard_activations:
+        logits = shard_hint(logits, list(BATCH), [], ["model"])
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": new_kv, "offset": offset + s}
+        if cfg.first_dense_layers:
+            new_cache["first"] = new_first
+    return logits, new_cache, {"moe_aux": aux_total / max(cfg.n_layers, 1)}
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+def transformer_cache_spec(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16):
+    n_stack = cfg.n_layers - cfg.first_dense_layers
+    if cfg.use_mla:
+        per_layer = mla.mla_cache_spec(cfg, batch, max_len, dtype)
+    else:
+        per_layer = {
+            "k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+
+    def stack(sds):
+        return jax.ShapeDtypeStruct((n_stack,) + sds.shape, sds.dtype)
+
+    spec = {"layers": jax.tree.map(stack, per_layer),
+            "offset": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.first_dense_layers:
+        # first dense layers always use plain GQA cache shape (MLA lite's first
+        # layer is dense-MLP but still MLA attention; keep MLA cache for it)
+        spec["first"] = [per_layer for _ in range(cfg.first_dense_layers)]
+    return spec

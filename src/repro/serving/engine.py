@@ -1,0 +1,147 @@
+"""Inference serving steps + a bucketed host-side engine.
+
+``make_prefill_step`` / ``make_serve_step`` build the jit-able pure functions
+the dry-run lowers and the engine executes. The engine compiles one
+executable per (batch-bucket, seq-bucket) — the TPU analogue of the paper's
+per-configuration TensorRT engines — and FCPO's iAgent actions select which
+bucket runs each step (batch size ↔ BS action, seq/patch bucket ↔ RES action).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+def make_prefill_step(model: Model, with_cache: bool = True,
+                      use_pallas: bool = False) -> Callable:
+    """(params, cache|None, batch) -> (last_logits, cache)."""
+
+    def prefill_step(params, cache, batch):
+        logits, new_cache, _ = model.apply(params, batch, cache,
+                                           use_pallas=use_pallas)
+        return logits[:, -1], new_cache
+
+    if not with_cache:
+        def prefill_only(params, batch):
+            logits, _, _ = model.apply(params, batch, use_pallas=use_pallas)
+            return logits
+
+        return prefill_only
+    return prefill_step
+
+
+def make_serve_step(model: Model, use_pallas: bool = False,
+                    greedy: bool = True) -> Callable:
+    """One decode step: (params, cache, batch) -> (next_tokens, cache).
+
+    ``batch["tokens"]`` is (B, 1) — the previously emitted token; the step
+    appends it to the cache and returns the argmax next token. This is the
+    function lowered for the ``decode_32k`` / ``long_500k`` dry-run cells.
+    """
+
+    def serve_step(params, cache, batch):
+        logits, new_cache, _ = model.apply(params, batch, cache,
+                                           use_pallas=use_pallas)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt[:, None], new_cache
+        return logits[:, -1], new_cache
+
+    return serve_step
+
+
+def make_encode_step(model: Model, use_pallas: bool = False) -> Callable:
+    """Encoder scoring step (hubert): (params, batch) -> logits."""
+
+    def encode_step(params, batch):
+        logits, _, _ = model.apply(params, batch, use_pallas=use_pallas)
+        return logits
+
+    return encode_step
+
+
+# ---------------------------------------------------------------------------
+# Host-side bucketed engine
+# ---------------------------------------------------------------------------
+def _bucket(n: int, buckets) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ServingEngine:
+    """Bucketed compile-cache serving engine for one model replica.
+
+    FCPO control surface:
+      * ``batch_bucket``  — the iAgent BS action picks the compiled batch size
+      * ``seq_bucket``    — the RES action picks the input length bucket
+        (frame-packing analogue: short requests are packed/padded into it)
+      * concurrency is managed by the caller (MT action = in-flight steps)
+    """
+
+    def __init__(self, model: Model, params, max_cache_len: int = 4096,
+                 batch_buckets=(1, 2, 4, 8, 16, 32, 64),
+                 seq_buckets=(128, 256, 512, 1024), cache_dtype=None):
+        self.model = model
+        self.params = params
+        self.max_cache_len = max_cache_len
+        self.cache_dtype = cache_dtype or jnp.bfloat16
+        self.batch_buckets = tuple(batch_buckets)
+        self.seq_buckets = tuple(seq_buckets)
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_serve_step(model))
+        self._encode = jax.jit(make_encode_step(model))
+        self._caches: Dict[int, Any] = {}
+        self.stats = {"prefill_calls": 0, "decode_calls": 0,
+                      "padded_tokens": 0, "real_tokens": 0}
+
+    def new_cache(self, batch: int):
+        spec = self.model.cache_spec(batch, self.max_cache_len, self.cache_dtype)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    def prefill(self, tokens, extra: Optional[Dict[str, Any]] = None):
+        """tokens: (B, S) int array. Pads B and S to buckets; returns
+        (last_logits, cache, info)."""
+        b, s = tokens.shape
+        bb = _bucket(b, self.batch_buckets)
+        sb = _bucket(s, self.seq_buckets)
+        pad_b, pad_s = bb - b, sb - s
+        tok = jnp.pad(tokens, ((0, pad_b), (0, pad_s)))
+        batch = {"tokens": tok}
+        if extra:
+            batch.update(extra)
+        cache = self.new_cache(bb)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, cache, batch)
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.stats["prefill_calls"] += 1
+        self.stats["padded_tokens"] += pad_b * sb + b * pad_s
+        self.stats["real_tokens"] += b * s
+        return logits[:b], cache, {"bucket": (bb, sb), "latency_s": dt}
+
+    def decode(self, cache, last_tokens):
+        t0 = time.perf_counter()
+        nxt, cache = self._decode(self.params, cache, {"tokens": last_tokens})
+        nxt.block_until_ready()
+        self.stats["decode_calls"] += 1
+        return nxt, cache, {"latency_s": time.perf_counter() - t0}
+
+    def generate(self, tokens, steps: int):
+        b = tokens.shape[0]
+        bb = _bucket(b, self.batch_buckets)
+        tokens = jnp.pad(tokens, ((0, bb - b), (0, 0)))  # decode at bucket size
+        logits, cache, _ = self.prefill(tokens)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out = [cur]
+        for _ in range(steps - 1):
+            cur, cache, _ = self.decode(cache, cur)
+            out.append(cur)
+        return jnp.concatenate(out, axis=1)[:b]

@@ -1,0 +1,85 @@
+"""Fault-tolerant checkpointing with elastic restore.
+
+Format: one ``.npz`` per save (arrays keyed by pytree path) plus a JSON
+manifest (step, arch, mesh shape, partition specs). ``restore`` device_puts
+onto *whatever mesh the restoring job has* — the mesh shape at save time does
+not constrain the mesh at restore time (elastic rescale: checkpoints are
+logical, sharding is re-applied from the current rules).
+
+Saves are atomic (tmp file + rename) so a crash mid-save never corrupts the
+latest checkpoint; ``latest_step`` scans for the newest complete manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    arrays_path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    os.replace(tmp, arrays_path)
+    manifest = {
+        "step": step,
+        "arrays": os.path.basename(arrays_path),
+        "keys": sorted(flat),
+        "extra": extra or {},
+    }
+    mtmp = arrays_path + ".manifest.tmp"
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, os.path.join(ckpt_dir, f"step_{step:08d}.json"))
+    return arrays_path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f[len("step_"):-len(".json")])
+             for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".json")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). If ``shardings`` (a matching pytree of NamedSharding)
+    is given, arrays are placed sharded — onto the *current* mesh, which may
+    differ from the mesh at save time (elastic restore)."""
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(ckpt_dir, manifest["arrays"]))
+
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]:
+        keys.append("/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path))
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(keys))
+
+    out = []
+    for key, leaf, shd in zip(keys, leaves_like, shard_leaves):
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"checkpoint/model shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest

@@ -1,0 +1,105 @@
+"""Training step: loss, remat, microbatch gradient accumulation.
+
+``make_train_step`` builds a pure function ``(state, batch) -> (state,
+metrics)`` suitable for ``jax.jit`` with in/out shardings from
+``distributed/sharding.py``. Microbatching splits the global batch on the
+leading axis and accumulates grads with ``lax.scan`` (activation memory /
+throughput trade-off — a §Perf knob).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def cross_entropy(logits, labels, mask=None, impl="gather"):
+    logits = logits.astype(jnp.float32)
+    if impl == "sharded":
+        # Vocab-shard-friendly CE: no take_along_axis over the sharded vocab
+        # dim (which makes GSPMD all-gather the full (B,S,V) logits). The
+        # gold logit comes from a fused compare+select+reduce that contracts
+        # the vocab dim locally; only (B,S)-sized partials cross the wire.
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        idx = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+        hit = labels[..., None] == idx
+        gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    else:
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def make_loss_fn(model: Model, moe_aux_weight: float = 0.01, remat: bool = True):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, _, aux = model.apply(params, batch, remat=remat)
+        if cfg.shard_activations:
+            from repro.distributed.sharding import BATCH, shard_hint
+            logits = shard_hint(logits, list(BATCH), [], ["model"])
+        if cfg.causal and "labels" in batch:
+            # next-token prediction: shift
+            loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                                 impl=cfg.ce_impl)
+        elif "mask" in batch:  # masked-unit prediction (hubert)
+            loss = cross_entropy(logits, batch["labels"], batch["mask"],
+                                 impl=cfg.ce_impl)
+        else:
+            loss = cross_entropy(logits, batch["labels"], impl=cfg.ce_impl)
+        total = loss + moe_aux_weight * aux["moe_aux"]
+        return total, {"ce": loss, "moe_aux": aux["moe_aux"]}
+
+    return loss_fn
+
+
+def init_train_state(model: Model, key):
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig = AdamWConfig(),
+                    microbatches: int = 1, remat: bool = True,
+                    moe_aux_weight: float = 0.01):
+    loss_fn = make_loss_fn(model, moe_aux_weight, remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        params = state["params"]
+        if microbatches == 1:
+            (loss, extras), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), _ = jax.lax.scan(acc_body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss = l_sum / microbatches
+            extras = {"ce": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, state["opt"])
+        metrics = {"loss": loss, **extras, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device (the 512-device
+# override is ONLY for launch/dryrun.py, per the multi-pod dry-run contract).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "dry-run device-count override must not leak into tests"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,311 @@
+"""FCPO core unit tests: agent network, losses, buffer, aggregation, CRL."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core import env as env_mod
+from repro.core import federated as fed
+from repro.core.agent import (ActionMask, agent_forward, agent_init, full_mask,
+                              num_params, param_bytes, sample_actions)
+from repro.core.buffer import (buffer_init, buffer_insert, buffer_memory_bytes,
+                               diversity)
+from repro.core.crl import AgentState, crl_episode
+from repro.core.fleet import fleet_episode, fleet_init, fl_round, train_fleet
+from repro.core.ppo import (Rollout, agent_opt_init, agent_update, fcpo_loss,
+                            finetune_heads, gae, returns)
+from repro.data.workload import fleet_traces, switching_traces
+
+CFG = FCPOConfig()
+KEY = jax.random.PRNGKey(0)
+
+
+def make_rollout(key, cfg=CFG, t=None):
+    t = t or cfg.n_steps
+    ks = jax.random.split(key, 5)
+    return Rollout(
+        states=jax.random.normal(ks[0], (t, cfg.state_dim)),
+        actions=jnp.stack([
+            jax.random.randint(ks[1], (t,), 0, cfg.n_res),
+            jax.random.randint(ks[2], (t,), 0, cfg.n_bs),
+            jax.random.randint(ks[3], (t,), 0, cfg.n_mt)], -1),
+        logp_old=-jnp.abs(jax.random.normal(ks[4], (t,))),
+        rewards=jnp.tanh(jax.random.normal(ks[0], (t,))),
+        values_old=jax.random.normal(ks[1], (t,)) * 0.1,
+    )
+
+
+class TestAgent:
+    def test_architecture_dims(self):
+        """Fig. 4: input 8, hidden 64, features 48, value + 3 cascaded heads."""
+        p = agent_init(CFG, KEY)
+        assert p["backbone"]["l1"]["w"].shape == (8, 64)
+        assert p["backbone"]["l2"]["w"].shape == (64, 48)
+        assert p["value"]["w"].shape == (48, 1)
+        assert p["head_res"]["w"].shape == (48, CFG.n_res)
+        # cascade: bs/mt heads consume backbone features ++ res distribution
+        assert p["head_bs"]["w"].shape == (48 + CFG.n_res, CFG.n_bs)
+        assert p["head_mt"]["w"].shape == (48 + CFG.n_res, CFG.n_mt)
+
+    def test_lightweight(self):
+        """Paper: iAgent ≈ 53 KB. Ours must stay the same order (< 64 KB)."""
+        p = agent_init(CFG, KEY)
+        assert param_bytes(p) < 64 * 1024
+        assert num_params(p) < 16_000
+
+    def test_masked_actions_never_sampled(self):
+        p = agent_init(CFG, KEY)
+        mask = ActionMask(jnp.ones(CFG.n_res, bool),
+                          jnp.asarray([True] * 4 + [False] * 3),  # bs <= 8
+                          jnp.ones(CFG.n_mt, bool))
+        state = jax.random.normal(KEY, (64, 8))
+        actions, _, out = sample_actions(CFG, p, state, mask,
+                                         jax.random.PRNGKey(7))
+        assert int(actions[:, 1].max()) <= 3
+        assert bool(jnp.all(out["bs"][:, 4:] < -1e20))
+
+    def test_cascade_feeds_res_into_bs(self):
+        """Changing only the res head's params must change the bs policy."""
+        p = agent_init(CFG, KEY)
+        s = jax.random.normal(KEY, (8,))
+        out1 = agent_forward(CFG, p, s, full_mask(CFG))
+        p2 = jax.tree.map(lambda x: x, p)
+        # perturb one res option's logit (a uniform shift would be
+        # softmax-invariant and correctly leave the cascade unchanged)
+        p2["head_res"] = dict(p2["head_res"],
+                              b=p2["head_res"]["b"].at[0].add(3.0))
+        out2 = agent_forward(CFG, p2, s, full_mask(CFG))
+        assert not jnp.allclose(out1["bs"], out2["bs"])
+        assert jnp.allclose(out1["value"], out2["value"])  # value unaffected
+
+
+class TestPPO:
+    def test_gae_matches_manual(self):
+        cfg = CFG
+        r = jnp.asarray([1.0, 0.0, -1.0])
+        v = jnp.asarray([0.5, 0.2, 0.1])
+        adv = gae(cfg, r, v)
+        d2 = -1.0 + 0.0 - 0.1
+        d1 = 0.0 + cfg.gamma * 0.1 - 0.2
+        d0 = 1.0 + cfg.gamma * 0.2 - 0.5
+        g = cfg.gamma * cfg.lam
+        exp = jnp.asarray([d0 + g * (d1 + g * d2), d1 + g * d2, d2])
+        np.testing.assert_allclose(np.asarray(adv), np.asarray(exp), rtol=1e-5)
+
+    def test_returns_discounted(self):
+        r = jnp.asarray([1.0, 1.0, 1.0])
+        rets = returns(CFG, r)
+        np.testing.assert_allclose(np.asarray(rets),
+                                   [1.11, 1.1, 1.0], rtol=1e-6)
+
+    def test_loss_components_finite(self):
+        p = agent_init(CFG, KEY)
+        total, m = fcpo_loss(CFG, p, make_rollout(KEY), full_mask(CFG))
+        for k in ("l_p", "l_v", "l_pen", "loss"):
+            assert np.isfinite(float(m[k])), k
+        # Eq. 3: total is exactly the sum of its parts
+        np.testing.assert_allclose(float(total),
+                                   float(m["l_p"] + m["l_v"] + m["l_pen"]),
+                                   rtol=1e-6)
+
+    def test_loss_gate_skips_update(self):
+        cfg = FCPOConfig(loss_gate=1e9)  # gate everything
+        p = agent_init(cfg, KEY)
+        opt = agent_opt_init(p)
+        p2, opt2, m = agent_update(cfg, p, opt, make_rollout(KEY),
+                                   full_mask(cfg))
+        assert float(m["gated"]) == 1.0
+        diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p, p2)
+        assert max(jax.tree.leaves(diffs)) == 0.0
+
+    def test_update_moves_params(self):
+        cfg = FCPOConfig(loss_gate=0.0)
+        p = agent_init(cfg, KEY)
+        p2, _, m = agent_update(cfg, p, agent_opt_init(p), make_rollout(KEY),
+                                full_mask(cfg))
+        diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p, p2)
+        assert max(jax.tree.leaves(diffs)) > 0.0
+        assert float(m["gated"]) == 0.0
+
+    def test_finetune_freezes_backbone_and_value(self):
+        p = agent_init(CFG, KEY)
+        p2, _ = finetune_heads(CFG, p, agent_opt_init(p), make_rollout(KEY),
+                               full_mask(CFG), steps=3)
+        for k in ("backbone", "value"):
+            d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                             p[k], p2[k])
+            assert max(jax.tree.leaves(d)) == 0.0, k
+        moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                             p["head_res"], p2["head_res"])
+        assert max(jax.tree.leaves(moved)) > 0.0
+
+
+class TestBuffer:
+    def test_memory_bounded(self):
+        """Paper Fig. 11: fixed-size buffer bounds memory (vs 5000+ exps)."""
+        assert buffer_memory_bytes(CFG) < 64 * 1024
+
+    def test_insert_until_full_then_evict_least_diverse(self):
+        cfg = FCPOConfig(buffer_size=4)
+        buf = buffer_init(cfg)
+        na = cfg.n_res + cfg.n_bs + cfg.n_mt
+        probs = jnp.full((na,), 1.0 / na)
+        for i in range(4):
+            buf = buffer_insert(cfg, buf, jnp.full((8,), float(i)),
+                                jnp.zeros((3,), jnp.int32), 0.0, 0.0, 0.0, probs)
+        assert bool(buf.filled.all())
+        # a maximally-novel state must displace something
+        far = jnp.full((8,), 100.0)
+        buf2 = buffer_insert(cfg, buf, far, jnp.zeros((3,), jnp.int32),
+                             0.0, 0.0, 0.0, probs)
+        assert bool((buf2.states == 100.0).any())
+        assert bool(buf2.filled.all())  # still exactly capacity
+
+    def test_duplicate_state_not_inserted_when_full(self):
+        cfg = FCPOConfig(buffer_size=4)
+        buf = buffer_init(cfg)
+        na = cfg.n_res + cfg.n_bs + cfg.n_mt
+        probs = jnp.full((na,), 1.0 / na)
+        for i in range(4):
+            buf = buffer_insert(cfg, buf, jnp.full((8,), float(i) * 10),
+                                jnp.zeros((3,), jnp.int32), 0.0, 0.0, 0.0, probs)
+        mean_state = buf.states.mean(0)  # centroid: lowest possible novelty
+        buf2 = buffer_insert(cfg, buf, mean_state, jnp.zeros((3,), jnp.int32),
+                             0.0, 0.0, 0.0, probs)
+        assert not bool(jnp.any(jnp.all(buf2.states == mean_state, axis=-1)))
+
+
+class TestFederated:
+    def _fleet(self, n=6, n_pods=1):
+        return fleet_init(CFG, n, KEY, n_pods=n_pods)
+
+    def test_backbone_equal_aggregation(self):
+        """After Alg. 1, every selected/unselected agent shares one backbone
+        per pod, equal to (base + Σ clients)/(|M|+1)."""
+        n = 4
+        fleet = self._fleet(n)
+        params = fleet.astate.params
+        sel = jnp.ones((n,), bool)
+        hl = jnp.zeros((n, 3))
+        newp, newb = fed.aggregate(CFG, params, fleet.base_params, sel, hl,
+                                   fleet.head_groups, fleet.pod_ids, 1)
+        w = params["backbone"]["l1"]["w"]
+        expected = (fleet.base_params["backbone"]["l1"]["w"][0]
+                    + w.sum(0)) / (n + 1)
+        np.testing.assert_allclose(np.asarray(newp["backbone"]["l1"]["w"][0]),
+                                   np.asarray(expected), rtol=1e-5)
+        for i in range(1, n):
+            np.testing.assert_allclose(
+                np.asarray(newp["backbone"]["l1"]["w"][i]),
+                np.asarray(newp["backbone"]["l1"]["w"][0]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(newb["backbone"]["l1"]["w"][0]),
+                                   np.asarray(expected), rtol=1e-5)
+
+    def test_equal_losses_reduce_to_equal_weighting(self):
+        n = 4
+        fleet = self._fleet(n)
+        params = fleet.astate.params
+        sel = jnp.ones((n,), bool)
+        hl = jnp.ones((n, 3)) * 0.7  # identical losses
+        newp, _ = fed.aggregate(CFG, params, fleet.base_params, sel, hl,
+                                fleet.head_groups, fleet.pod_ids, 1)
+        w = params["head_bs"]["w"]
+        expected = (fleet.base_params["head_bs"]["w"][0] + w.sum(0)) / (n + 1)
+        np.testing.assert_allclose(np.asarray(newp["head_bs"]["w"][0]),
+                                   np.asarray(expected), rtol=1e-5)
+
+    def test_lower_loss_head_gets_more_weight(self):
+        n = 2
+        fleet = self._fleet(n)
+        params = jax.tree.map(jnp.copy, fleet.astate.params)
+        # make the two agents' bs heads distinguishable
+        params["head_bs"]["w"] = params["head_bs"]["w"].at[0].set(1.0)
+        params["head_bs"]["w"] = params["head_bs"]["w"].at[1].set(-1.0)
+        base = jax.tree.map(jnp.zeros_like, fleet.base_params)
+        sel = jnp.ones((n,), bool)
+        hl = jnp.asarray([[0.0, 0.0, 0.0], [0.0, 1.0, 0.0]])  # agent0 better bs
+        newp, _ = fed.aggregate(CFG, params, base, sel, hl,
+                                fleet.head_groups, fleet.pod_ids, 1)
+        agg = np.asarray(newp["head_bs"]["w"][0])
+        assert agg.mean() > 0  # pulled toward the low-loss (+1) head
+
+    def test_unavailable_clients_excluded(self):
+        n = 6
+        fleet = self._fleet(n)
+        stats = fed.ClientStats(
+            mem_avail=jnp.ones(n), compute_avail=jnp.ones(n),
+            diversity=jnp.ones(n), bandwidth=jnp.full((n,), 10.0),
+            available=jnp.asarray([True, True, False, True, False, True]))
+        sel = fed.select_clients(CFG, stats)
+        assert not bool(sel[2]) and not bool(sel[4])
+        assert int(sel.sum()) == max(1, round(CFG.clients_per_round * n))
+
+    def test_bandwidth_raises_utility(self):
+        n = 4
+        stats = fed.ClientStats(
+            mem_avail=jnp.ones(n), compute_avail=jnp.ones(n),
+            diversity=jnp.ones(n),
+            bandwidth=jnp.asarray([1.0, 10.0, 40.0, 90.0]),
+            available=jnp.ones(n, bool))
+        u = fed.total_utility(stats)
+        assert bool(jnp.all(jnp.diff(u) > 0))
+
+    def test_empty_selection_keeps_base(self):
+        """Total straggler round: aggregation degenerates gracefully."""
+        n = 4
+        fleet = self._fleet(n)
+        rates = fleet_traces(KEY, n, CFG.n_steps)
+        fleet2, rollouts, _ = fleet_episode(CFG, fleet, rates)
+        fleet3, sel = fl_round(CFG, fleet2, rollouts,
+                               available=jnp.zeros((n,), bool))
+        assert int(sel.sum()) == 0
+        assert all(np.isfinite(np.asarray(x)).all()
+                   for x in jax.tree.leaves(fleet3.astate.params))
+
+
+class TestEnv:
+    def test_reward_bounded(self):
+        ep = env_mod.default_env_params()
+        s = env_mod.env_init(CFG)
+        for a in ([0, 0, 0], [3, 6, 3], [0, 6, 0], [2, 3, 1]):
+            s2, r, info = env_mod.env_step(CFG, ep, s,
+                                           jnp.asarray(a, jnp.int32), 50.0)
+            assert -1.0 <= float(r) <= 1.0
+            assert float(info["throughput"]) >= 0
+
+    def test_bigger_batch_higher_batch_latency(self):
+        ep = env_mod.default_env_params()
+        s = env_mod.env_init(CFG)
+        _, _, i_small = env_mod.env_step(CFG, ep, s, jnp.asarray([0, 0, 0]), 50.0)
+        _, _, i_big = env_mod.env_step(CFG, ep, s, jnp.asarray([0, 6, 0]), 50.0)
+        assert float(i_big["batch_latency"]) > float(i_small["batch_latency"])
+
+    def test_queue_drops_bounded_by_capacity(self):
+        ep = env_mod.default_env_params(speed=0.25)
+        s = env_mod.env_init(CFG)
+        for _ in range(20):
+            s, _, info = env_mod.env_step(CFG, ep, s, jnp.asarray([0, 0, 0]),
+                                          400.0)
+        assert float(s.pre_q) <= float(ep.queue_cap) + 1e-5
+
+
+class TestLearning:
+    def test_fleet_learns_on_stationary_workload(self):
+        cfg = FCPOConfig()
+        fleet = fleet_init(cfg, 4, KEY)
+        traces = fleet_traces(jax.random.PRNGKey(1), 4, 2000)
+        _, hist = train_fleet(cfg, fleet, traces)
+        first, last = hist["reward"][:20].mean(), hist["reward"][-20:].mean()
+        assert last > first + 0.2, (first, last)
+
+    def test_frozen_agent_does_not_change(self):
+        cfg = FCPOConfig()
+        fleet = fleet_init(cfg, 2, KEY)
+        traces = fleet_traces(jax.random.PRNGKey(1), 2, 100)
+        before = jax.tree.map(jnp.copy, fleet.astate.params)
+        fleet, hist = train_fleet(cfg, fleet, traces, learn=False,
+                                  federated=False)
+        diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                             before, fleet.astate.params)
+        assert max(jax.tree.leaves(diffs)) == 0.0

@@ -1,0 +1,181 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core import env as env_mod
+from repro.core import federated as fed
+from repro.core.agent import ActionMask, agent_init, full_mask, sample_actions
+from repro.core.buffer import buffer_init, buffer_insert
+from repro.core.ppo import gae, returns, Rollout
+from repro.kernels import ref
+
+CFG = FCPOConfig()
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Buffer invariants
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-50, 50), min_size=1, max_size=30),
+       st.integers(2, 8))
+def test_buffer_never_exceeds_capacity(vals, cap):
+    cfg = FCPOConfig(buffer_size=cap)
+    buf = buffer_init(cfg)
+    na = cfg.n_res + cfg.n_bs + cfg.n_mt
+    probs = jnp.full((na,), 1.0 / na)
+    for v in vals:
+        buf = buffer_insert(cfg, buf, jnp.full((8,), v),
+                            jnp.zeros((3,), jnp.int32), 0.0, 0.0, 0.0, probs)
+    assert int(buf.filled.sum()) <= cap
+    assert int(buf.filled.sum()) == min(len(vals), cap) or int(buf.filled.sum()) == cap
+    # scores of filled slots are finite
+    assert np.isfinite(np.asarray(buf.score)[np.asarray(buf.filled)]).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_buffer_count_tracks_attempts(seed):
+    cfg = FCPOConfig(buffer_size=4)
+    buf = buffer_init(cfg)
+    na = cfg.n_res + cfg.n_bs + cfg.n_mt
+    probs = jnp.full((na,), 1.0 / na)
+    k = jax.random.PRNGKey(seed)
+    n = int(jax.random.randint(k, (), 1, 10))
+    for i in range(n):
+        buf = buffer_insert(cfg, buf, jax.random.normal(jax.random.fold_in(k, i), (8,)),
+                            jnp.zeros((3,), jnp.int32), 0.0, 0.0, 0.0, probs)
+    assert int(buf.count) == n
+
+
+# ---------------------------------------------------------------------------
+# Aggregation invariants
+# ---------------------------------------------------------------------------
+def _mini_fleet(n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = jax.vmap(lambda k: agent_init(CFG, k))(jax.random.split(key, n))
+    base = jax.tree.map(lambda x: x[None] * 0 + 0.5, jax.tree.map(lambda x: x[0], params))
+    masks = jax.tree.map(lambda m: jnp.broadcast_to(m, (n,) + m.shape),
+                         full_mask(CFG))
+    groups = fed.head_group_ids(masks)
+    return params, base, groups
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(0, 100))
+def test_aggregation_permutation_invariant(n, seed):
+    """Shuffling client order must not change the aggregate (no ordering
+    dependence — unlike the paper's literal accumulating pseudo-code)."""
+    params, base, groups = _mini_fleet(n, seed)
+    sel = jnp.ones((n,), bool)
+    rng = np.random.default_rng(seed)
+    hl = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    pod = jnp.zeros((n,), jnp.int32)
+    newp1, newb1 = fed.aggregate(CFG, params, base, sel, hl, groups, pod, 1)
+
+    perm = jnp.asarray(rng.permutation(n))
+    params_p = jax.tree.map(lambda x: x[perm], params)
+    hl_p = hl[perm]
+    newp2, newb2 = fed.aggregate(CFG, params_p, base, sel, hl_p, groups, pod, 1)
+    for a, b in zip(jax.tree.leaves(newb1), jax.tree.leaves(newb2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(0, 100))
+def test_aggregation_preserves_structure_and_finiteness(n, seed):
+    params, base, groups = _mini_fleet(n, seed)
+    sel = jnp.asarray(np.random.default_rng(seed).random(n) < 0.7)
+    hl = jnp.zeros((n, 3))
+    newp, newb = fed.aggregate(CFG, params, base, sel, hl, groups,
+                               jnp.zeros((n,), jnp.int32), 1)
+    assert jax.tree_util.tree_structure(newp) == jax.tree_util.tree_structure(params)
+    for x in jax.tree.leaves(newp) + jax.tree.leaves(newb):
+        assert np.isfinite(np.asarray(x)).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 1000))
+def test_identical_clients_aggregate_to_themselves(seed):
+    """If every client AND the base are identical, Alg. 1 is a fixed point."""
+    key = jax.random.PRNGKey(seed)
+    one = agent_init(CFG, key)
+    n = 3
+    params = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), one)
+    base = jax.tree.map(lambda x: x[None], one)
+    masks = jax.tree.map(lambda m: jnp.broadcast_to(m, (n,) + m.shape),
+                         full_mask(CFG))
+    groups = fed.head_group_ids(masks)
+    newp, newb = fed.aggregate(CFG, params, base, jnp.ones((n,), bool),
+                               jnp.zeros((n, 3)), groups,
+                               jnp.zeros((n,), jnp.int32), 1)
+    for a, b in zip(jax.tree.leaves(newp), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Env / reward invariants
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(0, 3), st.integers(0, 6), st.integers(0, 3),
+       st.floats(1.0, 400.0), st.floats(0.25, 2.0))
+def test_reward_always_normalized(a_res, a_bs, a_mt, rate, speed):
+    ep = env_mod.default_env_params(speed=speed)
+    s = env_mod.env_init(CFG)
+    for _ in range(5):
+        s, r, info = env_mod.env_step(
+            CFG, ep, s, jnp.asarray([a_res, a_bs, a_mt], jnp.int32), rate)
+        assert -1.0 <= float(r) <= 1.0
+        assert float(info["effective_throughput"]) <= float(info["throughput"]) + 1e-6
+        assert float(s.pre_q) >= 0 and float(s.post_q) >= 0
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-1, 1), min_size=1, max_size=20))
+def test_gae_and_returns_finite_and_bounded(rs):
+    r = jnp.asarray(rs, jnp.float32)
+    v = jnp.zeros_like(r)
+    adv = gae(CFG, r, v)
+    ret = returns(CFG, r)
+    assert np.isfinite(np.asarray(adv)).all()
+    # γ=0.1 geometric bound: |returns| <= max|r| / (1-γ)
+    assert float(jnp.max(jnp.abs(ret))) <= (max(abs(x) for x in rs) + 1e-6) / 0.9
+
+
+# ---------------------------------------------------------------------------
+# Sampling respects masks (heterogeneous action spaces)
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(1, CFG.n_bs), st.integers(1, CFG.n_mt), st.integers(0, 10_000))
+def test_sampling_respects_arbitrary_masks(nb, nm, seed):
+    key = jax.random.PRNGKey(seed)
+    params = agent_init(CFG, key)
+    mask = ActionMask(
+        jnp.ones(CFG.n_res, bool),
+        jnp.arange(CFG.n_bs) < nb,
+        jnp.arange(CFG.n_mt) < nm,
+    )
+    state = jax.random.normal(key, (32, 8))
+    actions, logp, _ = sample_actions(CFG, params, state, mask, key)
+    assert int(actions[:, 1].max()) < nb
+    assert int(actions[:, 2].max()) < nm
+    assert np.isfinite(np.asarray(logp)).all()
+
+
+# ---------------------------------------------------------------------------
+# Packing is a (partial) permutation: no token lost or duplicated
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.lists(st.integers(-1, 31), min_size=1, max_size=64))
+def test_pack_ref_is_exact_gather(idx_list):
+    tok = jnp.arange(32 * 4, dtype=jnp.float32).reshape(32, 4)
+    idx = jnp.asarray(idx_list, jnp.int32)
+    out = ref.pack_ref(tok, idx)
+    for i, j in enumerate(idx_list):
+        if j >= 0:
+            np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(tok[j]))
+        else:
+            assert float(jnp.abs(out[i]).sum()) == 0.0

@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests: serving engine, FCPO-controlled serving,
+warm start, and CRL adaptation — the paper's system-level claims in miniature."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.fleet import fleet_init, fleet_episode, fl_round, train_fleet
+from repro.data.workload import fleet_traces, ood_traces, switching_traces
+from repro.models.registry import get_config, get_model
+from repro.serving.engine import ServingEngine
+from repro.serving.slo import BoundedQueue, Request, SLOTracker
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestServingEngine:
+    def _engine(self, **kw):
+        cfg = get_config("qwen2-0.5b").reduced().replace(n_layers=2,
+                                                         vocab_size=128)
+        model = get_model(cfg)
+        params = model.init(KEY)
+        return ServingEngine(model, params, max_cache_len=128,
+                             batch_buckets=(2, 4), seq_buckets=(16, 32), **kw)
+
+    def test_generate_deterministic_and_shaped(self):
+        eng = self._engine()
+        tokens = jax.random.randint(KEY, (2, 12), 0, 128)
+        out1 = eng.generate(tokens, steps=5)
+        out2 = eng.generate(tokens, steps=5)
+        assert out1.shape == (2, 5)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+    def test_bucketing_pads_and_unpads(self):
+        eng = self._engine()
+        tokens = jax.random.randint(KEY, (3, 20), 0, 128)  # -> bucket (4, 32)
+        logits, cache, info = eng.prefill(tokens)
+        assert info["bucket"] == (4, 32)
+        assert logits.shape[0] == 3
+        assert eng.stats["padded_tokens"] > 0
+
+    def test_prefill_decode_agree_with_plain_forward(self):
+        eng = self._engine(cache_dtype=jnp.float32)
+        cfg = eng.model.cfg
+        tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        logits, _, _ = eng.prefill(tokens)
+        full, _, _ = eng.model.apply(eng.params, {"tokens": tokens})
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, -1]), atol=1e-4)
+
+
+class TestSLOQueue:
+    def test_bounded_queue_drops(self):
+        q = BoundedQueue(capacity=2)
+        for i in range(4):
+            q.push(Request(i, arrival_t=0.0))
+        assert len(q) == 2 and q.drops == 2
+
+    def test_effective_throughput_counts_only_on_time(self):
+        tr = SLOTracker(slo_s=0.25)
+        reqs = [Request(0, arrival_t=0.0), Request(1, arrival_t=0.9)]
+        tr.complete(reqs, now=1.0)  # latencies 1.0s and 0.1s
+        thr, eff, lat = tr.window(now=1.0)
+        assert thr == 2.0 and eff == 1.0
+
+
+class TestFCPOSystem:
+    def test_warm_start_beats_cold_start(self):
+        """Fig. 10 in miniature: a pre-trained fleet dropped into an OOD
+        workload outperforms a blank fleet on early episodes."""
+        cfg = FCPOConfig()
+        n = 4
+        warm = fleet_init(cfg, n, KEY)
+        traces = fleet_traces(jax.random.PRNGKey(1), n, 1500)
+        warm, _ = train_fleet(cfg, warm, traces)
+
+        ood = ood_traces(jax.random.PRNGKey(2), n, 300)
+        warm2, hw = train_fleet(cfg, warm, ood)
+        cold = fleet_init(cfg, n, jax.random.PRNGKey(3))
+        cold2, hc = train_fleet(cfg, cold, ood)
+        assert hw["reward"][:10].mean() > hc["reward"][:10].mean()
+
+    def test_crl_adapts_after_context_switch(self):
+        """Fig. 13 in miniature: learning fleet beats a frozen copy on a
+        switching workload."""
+        cfg = FCPOConfig()
+        n = 4
+        fleet = fleet_init(cfg, n, KEY)
+        fleet, _ = train_fleet(cfg, fleet,
+                               fleet_traces(jax.random.PRNGKey(1), n, 1200))
+        switch = switching_traces(jax.random.PRNGKey(2), n, 800, segment=50)
+        learn_fleet, h_learn = train_fleet(cfg, fleet, switch)
+        frozen_fleet, h_frozen = train_fleet(cfg, fleet, switch, learn=False,
+                                             federated=False)
+        assert h_learn["reward"][-30:].mean() >= h_frozen["reward"][-30:].mean()
+
+    def test_federated_round_is_fault_tolerant(self):
+        """Stragglers every round; training must proceed and stay finite."""
+        cfg = FCPOConfig(fl_every=1)
+        n = 6
+        fleet = fleet_init(cfg, n, KEY, n_pods=2)
+        traces = fleet_traces(jax.random.PRNGKey(4), n, 400)
+        fleet, hist = train_fleet(cfg, fleet, traces, straggler_prob=0.5)
+        assert np.isfinite(hist["reward"]).all()
+        for x in jax.tree.leaves(fleet.astate.params):
+            assert np.isfinite(np.asarray(x)).all()
+
+    def test_heterogeneous_action_spaces_in_one_fleet(self):
+        """Two agent groups with different BS ranges coexist; aggregation
+        keeps them inside their own group (Alg. 1 line 8)."""
+        from repro.core.agent import ActionMask
+        cfg = FCPOConfig(fl_every=1)
+        n = 4
+        masks = ActionMask(
+            res=jnp.ones((n, cfg.n_res), bool),
+            bs=jnp.stack([jnp.arange(cfg.n_bs) < (4 if i % 2 == 0 else 7)
+                          for i in range(n)]),
+            mt=jnp.ones((n, cfg.n_mt), bool),
+        )
+        fleet = fleet_init(cfg, n, KEY, masks=masks)
+        assert fleet.group_counts["head_bs"] == 2
+        traces = fleet_traces(jax.random.PRNGKey(5), n, 200)
+        fleet, rollouts, _ = fleet_episode(cfg, fleet, traces[:, :cfg.n_steps])
+        fleet2, sel = fl_round(cfg, fleet, rollouts)
+        # constrained agents never act outside their mask
+        fleet3, rollouts3, _ = fleet_episode(
+            cfg, fleet2, traces[:, cfg.n_steps:2 * cfg.n_steps])
+        bs_actions = np.asarray(rollouts3.actions[:, :, 1])
+        assert bs_actions[0].max() < 4 and bs_actions[2].max() < 4
