@@ -1,14 +1,20 @@
 """Fig. 14: convergence speed vs number of federated pipelines (1 disables
 aggregation; more agents -> faster, smoother convergence, diminishing
-returns)."""
+returns) — plus the driver A/B: the reference Python loop (one dispatch per
+episode + per-metric host syncs) against the scanned driver (the entire
+episodes -> FL round -> pod-merge cadence compiled into ONE program)."""
 from __future__ import annotations
+
+import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import load_rows, save_rows
 from repro.configs.fcpo import FCPOConfig
-from repro.core.fleet import fleet_init, train_fleet
+from repro.core import federated as fed
+from repro.core.fleet import (fleet_init, train_fleet, train_fleet_reference,
+                              train_fleet_scan)
 from repro.data.workload import fleet_traces
 
 
@@ -25,12 +31,56 @@ def _converge_episode(curve, frac=0.9):
     return int(hits[0]) if len(hits) else len(curve)
 
 
+def _dispatch_counts(cfg, n_eps, n_pods, n_metrics):
+    """Host work per driver, by construction of the two loops: the reference
+    issues one ``fleet_episode`` dispatch per episode, one ``fl_round`` per
+    scheduled round, one ``pod_merge`` per hierarchical period, and one
+    blocking ``np.asarray`` per (episode x metric); the scanned driver issues
+    exactly one dispatch and one bulk history fetch."""
+    rounds = int(fed.fl_schedule(cfg, n_eps).sum())
+    merges = rounds // cfg.hierarchical_period if n_pods > 1 else 0
+    return {"reference": {"dispatches": n_eps + rounds + merges,
+                          "host_syncs": n_eps * n_metrics},
+            "scan": {"dispatches": 1, "host_syncs": 1}}
+
+
+def run_driver_ab(episodes=100, n=8, n_pods=2):
+    """Old-loop vs scanned-loop wall clock (cold incl. compile, then warm)
+    and dispatch counts, same fleet/traces/seeds."""
+    cfg = FCPOConfig()
+    traces = fleet_traces(jax.random.PRNGKey(1), n, episodes * cfg.n_steps)
+    runners = {
+        "reference": lambda f: train_fleet_reference(cfg, f, traces, seed=7),
+        "scan": lambda f: train_fleet_scan(cfg, f, traces, seed=7,
+                                           donate=False),
+    }
+    rows = []
+    hists = {}
+    for name, fn in runners.items():
+        walls = []
+        for _ in range(2):  # cold (compile) then warm
+            fleet = fleet_init(cfg, n, jax.random.PRNGKey(0), n_pods=n_pods)
+            t0 = time.time()
+            _, hists[name] = fn(fleet)
+            walls.append(time.time() - t0)
+        counts = _dispatch_counts(cfg, episodes, n_pods,
+                                  len(hists[name]))[name]
+        rows.append({"name": f"fig14_driver_{name}", "pipelines": n,
+                     "wall_cold_s": walls[0], "wall_warm_s": walls[1],
+                     **counts})
+    drift = max(float(np.max(np.abs(hists["scan"][k] - hists["reference"][k])))
+                for k in hists["scan"])
+    for r in rows:
+        r["metric_drift_vs_ref"] = drift
+    return rows
+
+
 def run(quick: bool = True):
     cached = load_rows("fig14")
     if cached:
         return cached
     episodes = 250 if quick else 600
-    rows = []
+    rows = run_driver_ab(episodes=min(episodes, 100))
     for n in (1, 2, 4, 8, 16):
         cfg = FCPOConfig()
         key = jax.random.PRNGKey(0)
@@ -51,14 +101,28 @@ def run(quick: bool = True):
 
 
 def main(quick: bool = True):
-    return [{
-        "name": r["name"], "us_per_call": "",
-        "derived": (f"final={r['reward_final']:+.3f} "
-                    f"converge@{r['converge_episode']}ep "
-                    f"std={r['reward_std_tail']:.3f}"),
-    } for r in run(quick)]
+    out = []
+    for r in run(quick):
+        if "wall_warm_s" in r:
+            out.append({
+                "name": r["name"],
+                "us_per_call": f"{r['wall_warm_s'] * 1e6:.0f}",
+                "derived": (f"warm={r['wall_warm_s']:.2f}s "
+                            f"cold={r['wall_cold_s']:.2f}s "
+                            f"dispatches={r['dispatches']} "
+                            f"host_syncs={r['host_syncs']} "
+                            f"drift={r['metric_drift_vs_ref']:.1e}"),
+            })
+        else:
+            out.append({
+                "name": r["name"], "us_per_call": "",
+                "derived": (f"final={r['reward_final']:+.3f} "
+                            f"converge@{r['converge_episode']}ep "
+                            f"std={r['reward_std_tail']:.3f}"),
+            })
+    return out
 
 
 if __name__ == "__main__":
     from benchmarks.common import emit_csv
-    emit_csv(main())
+    emit_csv(main(quick=True))

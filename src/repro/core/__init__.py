@@ -6,5 +6,7 @@ from repro.core.buffer import DiversityBuffer, buffer_init, buffer_insert  # noq
 from repro.core.crl import AgentState, crl_episode, run_episode  # noqa: F401
 from repro.core.env import EnvParams, EnvState, default_env_params, env_init, env_step  # noqa: F401
 from repro.core.federated import aggregate, select_clients  # noqa: F401
-from repro.core.fleet import Fleet, fl_round, fleet_episode, fleet_init, train_fleet  # noqa: F401
+from repro.core.fleet import (Fleet, fl_round, fleet_episode, fleet_init,  # noqa: F401
+                              fleet_shardings, train_fleet,
+                              train_fleet_reference, train_fleet_scan)
 from repro.core.ppo import Rollout, agent_update, fcpo_loss, finetune_heads  # noqa: F401

@@ -192,6 +192,39 @@ def merge_pods(base_params):
     return jax.tree.map(mix, base_params)
 
 
+# ---------------------------------------------------------------------------
+# FL cadence — host-side schedule shared by the scanned and reference drivers
+# ---------------------------------------------------------------------------
+def fl_schedule(cfg: FCPOConfig, n_episodes: int, *, federated: bool = True,
+                learn: bool = True):
+    """(n_episodes,) bool numpy array: True where an FL round runs after the
+    episode (every ``fl_every``-th). Static fleet topology -> computed on host
+    once and fed to the scanned driver as per-episode xs."""
+    import numpy as np
+
+    if not (federated and learn):
+        return np.zeros((n_episodes,), bool)
+    if cfg.fl_every < 1:
+        raise ValueError(f"fl_every must be >= 1, got {cfg.fl_every}")
+    return (np.arange(1, n_episodes + 1) % cfg.fl_every) == 0
+
+
+def draw_availability(schedule, n_agents: int, straggler_prob: float = 0.0,
+                      seed: int = 0):
+    """(n_episodes, A) bool availability bits, pre-drawn on host so straggler
+    masking can live inside the scanned body. Draws one ``rng.random(A)``
+    vector per *scheduled FL round*, in episode order — bit-identical to the
+    reference driver's lazy per-round draws. Non-FL episodes are all-True
+    (never read)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    avail = np.ones((len(schedule), n_agents), bool)
+    for e in np.flatnonzero(schedule):
+        avail[e] = rng.random(n_agents) >= straggler_prob
+    return avail
+
+
 def head_group_ids(masks_stacked: ActionMask) -> Dict[str, Any]:
     """Group agents by identical action-space masks, per head.
 

@@ -4,7 +4,20 @@ One fleet = stacked agent pytrees (A on the leading axis) + stacked env
 params/states + per-pod base networks. The CRL inner loop is ``vmap``'d;
 the FL round is Algorithm 1 over the stacked axis. Under the production
 mesh the agent axis is sharded over ``data`` (and ``pod`` maps to the FL
-hierarchy), making the entire federated-continual system one SPMD program.
+hierarchy) via ``fleet_shardings``, making the entire federated-continual
+system one SPMD program.
+
+Two drivers:
+  * ``train_fleet_scan`` — the production path: ONE jitted, donated
+    ``lax.scan`` over episodes. The FL cadence (``fl_every``, the
+    ``hierarchical_period`` pod merge, straggler masking from pre-drawn
+    availability bits) lives inside the scanned body as ``lax.cond``s, and
+    per-episode metrics accumulate as stacked device arrays — a whole
+    training run is O(1) host dispatches instead of O(n_episodes).
+  * ``train_fleet_reference`` — the original Python loop (one dispatch per
+    episode, per-metric host syncs), kept as the equivalence oracle.
+``train_fleet`` is the compatibility entry point and delegates to the scan
+driver.
 """
 from __future__ import annotations
 
@@ -14,6 +27,7 @@ from typing import Any, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.fcpo import FCPOConfig
 from repro.core import env as env_mod
@@ -22,6 +36,7 @@ from repro.core.agent import ActionMask, agent_init, full_mask
 from repro.core.buffer import buffer_init
 from repro.core.crl import AgentState, crl_episode
 from repro.core.ppo import agent_opt_init, finetune_heads
+from repro.distributed import sharding as shd
 
 
 @jax.tree_util.register_pytree_node_class
@@ -70,11 +85,31 @@ class Fleet:
         return cls(*leaves, n_pods=n_pods, group_counts=dict(gc))
 
 
+def fleet_shardings(fleet: Fleet, mesh) -> Fleet:
+    """A Fleet of ``NamedSharding``s mirroring ``fleet``: agent-stacked
+    leaves over the mesh's (pod, data) / data axes, per-pod base networks
+    over the FL hierarchy, the episode counter replicated. Indivisible dims
+    fall through to replication (``greedy_spec``), so any fleet size works
+    on any mesh."""
+    agent = lambda x: NamedSharding(mesh, shd.agent_spec(jnp.shape(x), mesh))
+    pod = lambda x: NamedSharding(mesh, shd.pod_spec(jnp.shape(x), mesh))
+    vals = {}
+    for f in Fleet.FIELDS:
+        v = getattr(fleet, f)
+        if f == "base_params":
+            vals[f] = jax.tree.map(pod, v)
+        elif f == "episode":
+            vals[f] = NamedSharding(mesh, P())
+        else:
+            vals[f] = jax.tree.map(agent, v)
+    return Fleet(**vals, n_pods=fleet.n_pods, group_counts=fleet.group_counts)
+
+
 def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
                masks: Optional[ActionMask] = None,
                speeds: Optional[jnp.ndarray] = None,
                bandwidth: Optional[jnp.ndarray] = None,
-               slo_s: Optional[float] = None) -> Fleet:
+               slo_s: Optional[float] = None, mesh=None) -> Fleet:
     kp, kb, ke, kr = jax.random.split(key, 4)
     agent_keys = jax.random.split(kp, n_agents)
     params = jax.vmap(lambda k: agent_init(cfg, k))(agent_keys)
@@ -107,9 +142,12 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
 
     astate = AgentState(params=params, opt=opt, buffer=buffers,
                         env_state=env_states, rng=rngs)
-    return Fleet(astate, base_params, env_params, masks, group_ids,
-                 pod_ids, bandwidth, speeds, jnp.zeros((), jnp.int32),
-                 n_pods=n_pods, group_counts=group_counts)
+    fleet = Fleet(astate, base_params, env_params, masks, group_ids,
+                  pod_ids, bandwidth, speeds, jnp.zeros((), jnp.int32),
+                  n_pods=n_pods, group_counts=group_counts)
+    if mesh is not None:
+        fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
+    return fleet
 
 
 @partial(jax.jit, static_argnums=0, static_argnames=("learn",))
@@ -168,12 +206,12 @@ def pod_merge(cfg: FCPOConfig, fleet: Fleet):
     return fleet._replace(base_params=fed.merge_pods(fleet.base_params))
 
 
-def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
-                learn: bool = True, federated: bool = True,
-                straggler_prob: float = 0.0, seed: int = 0):
-    """Run episodes over ``traces`` (A, total_steps); FL every ``fl_every``
-    episodes; cross-pod merge every ``hierarchical_period`` rounds.
-    Returns (fleet, history dict of per-episode metric arrays)."""
+def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
+                          learn: bool = True, federated: bool = True,
+                          straggler_prob: float = 0.0, seed: int = 0):
+    """The original Python-loop driver: one host dispatch per episode plus a
+    per-metric host sync — O(n_episodes) dispatches. Kept as the equivalence
+    oracle for ``train_fleet_scan`` (same seeds => same straggler draws)."""
     a, total = traces.shape
     n_eps = total // cfg.n_steps
     rng = np.random.default_rng(seed)
@@ -191,3 +229,97 @@ def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
         for k, v in metrics.items():
             history.setdefault(k, []).append(np.asarray(v).mean())
     return fleet, {k: np.asarray(v) for k, v in history.items()}
+
+
+# ---------------------------------------------------------------------------
+# Scanned driver — the whole episodes -> FL round -> pod merge cadence is one
+# compiled program
+# ---------------------------------------------------------------------------
+def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
+                 avail: jnp.ndarray, do_fl: jnp.ndarray, learn: bool):
+    """Scan body host fn. rates_eps: (n_eps, A, n_steps); avail/do_fl:
+    pre-drawn availability bits and FL schedule, consumed as scan xs."""
+
+    def body(carry, xs):
+        flt, rounds = carry
+        rates, av, fl = xs
+        flt, rollouts, metrics = fleet_episode(cfg, flt, rates, learn=learn)
+
+        def with_fl(op):
+            f, rnd = op
+            f, _ = fl_round(cfg, f, rollouts, av)
+            rnd = rnd + 1
+            if f.n_pods > 1:
+                f = jax.lax.cond(rnd % cfg.hierarchical_period == 0,
+                                 lambda g: pod_merge(cfg, g), lambda g: g, f)
+            return f, rnd
+
+        flt, rounds = jax.lax.cond(fl, with_fl, lambda op: op, (flt, rounds))
+        ep_metrics = {k: v.mean() for k, v in metrics.items()}
+        return (flt, rounds), ep_metrics
+
+    (fleet, _), history = jax.lax.scan(
+        body, (fleet, jnp.zeros((), jnp.int32)), (rates_eps, avail, do_fl))
+    return fleet, history
+
+
+_SCAN_FNS: Dict[bool, Any] = {}
+
+
+def _scan_fn(donate: bool):
+    if donate not in _SCAN_FNS:
+        kw = dict(static_argnums=(0, 5))
+        if donate:
+            kw["donate_argnums"] = (1,)
+        _SCAN_FNS[donate] = jax.jit(_scan_driver, **kw)
+    return _SCAN_FNS[donate]
+
+
+def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
+                     learn: bool = True, federated: bool = True,
+                     straggler_prob: float = 0.0, seed: int = 0,
+                     mesh=None, donate: Optional[bool] = None):
+    """Scanned fleet driver: episodes over ``traces`` (A, total_steps), FL
+    every ``fl_every`` episodes (stragglers masked by pre-drawn availability
+    bits), cross-pod merge every ``hierarchical_period`` rounds — all inside
+    ONE jitted ``lax.scan``; O(1) host dispatches per run.
+
+    ``mesh``: install fleet shardings (agents over data, pods over the FL
+    hierarchy) on inputs before the call — the scan then runs SPMD.
+    ``donate``: donate the input fleet's buffers to the compiled call
+    (defaults to on except on CPU, where XLA cannot donate). Returns
+    (fleet, history) with history as per-episode numpy arrays, fetched in a
+    single device->host transfer."""
+    a, total = traces.shape
+    n_eps = total // cfg.n_steps
+    schedule = fed.fl_schedule(cfg, n_eps, federated=federated, learn=learn)
+    avail = fed.draw_availability(schedule, a, straggler_prob, seed)
+
+    rates_eps = jnp.asarray(traces[:, :n_eps * cfg.n_steps]).reshape(
+        a, n_eps, cfg.n_steps).transpose(1, 0, 2)
+    avail = jnp.asarray(avail)
+    do_fl = jnp.asarray(schedule)
+
+    if mesh is not None:
+        fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
+        xs_shard = lambda x: jax.device_put(
+            x, NamedSharding(mesh, shd.agent_batch_spec(x.shape, mesh)))
+        rates_eps, avail = xs_shard(rates_eps), xs_shard(avail)
+
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    fleet, history = _scan_fn(bool(donate))(
+        cfg, fleet, rates_eps, avail, do_fl, learn)
+    return fleet, jax.device_get(history)
+
+
+def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
+                learn: bool = True, federated: bool = True,
+                straggler_prob: float = 0.0, seed: int = 0):
+    """Compatibility entry point — delegates to the scanned driver. Buffer
+    donation stays off so callers may keep using the input fleet (forking a
+    fleet into warm/cold copies is a common pattern in the benchmarks)."""
+    return train_fleet_scan(cfg, fleet, traces, learn=learn,
+                            federated=federated,
+                            straggler_prob=straggler_prob, seed=seed,
+                            donate=False)

@@ -222,6 +222,43 @@ def cache_shardings(cache_tree, mesh: Mesh, stacked: bool = True):
     return jax.tree_util.tree_map_with_path(one, cache_tree)
 
 
+# ---------------------------------------------------------------------------
+# Fleet (FCPO agent-axis) rules
+# ---------------------------------------------------------------------------
+# Agent-stacked leaves (A, ...): the agent axis is the fleet's data
+# parallelism — spread over (pod, data) when A fills both, else data alone.
+AGENT = (("pod", "data"), "data")
+# Per-pod base networks (P, ...): the FL hierarchy. Pods ride the mesh's
+# ``pod`` axis when present (multi-pod production mesh); on a 2D mesh the
+# ``data`` candidate only engages when P divides the data axis size —
+# otherwise the (small) base networks replicate, which is always valid.
+POD = ("pod", "data")
+
+
+def agent_spec(shape, mesh) -> P:
+    """Shard an agent-stacked leaf's leading dim over the agent candidates;
+    trailing (per-agent) dims are tiny and stay replicated."""
+    if not shape:
+        return P()
+    return greedy_spec(shape, [list(AGENT)], mesh)
+
+
+def pod_spec(shape, mesh) -> P:
+    """Shard a per-pod leaf's leading dim over the FL-hierarchy candidates."""
+    if not shape:
+        return P()
+    return greedy_spec(shape, [list(POD)], mesh)
+
+
+def agent_batch_spec(shape, mesh, agent_axis: int = 1) -> P:
+    """Episode-major driver inputs, e.g. rates (n_eps, A, n_steps): shard the
+    *agent* dim over the agent candidates, replicate the scan/time dims."""
+    prefs = [[] for _ in shape]
+    if agent_axis < len(shape):
+        prefs[agent_axis] = list(AGENT)
+    return greedy_spec(shape, prefs, mesh)
+
+
 def ambient_mesh():
     """The mesh in context at trace time: abstract (jax.set_mesh) or the
     legacy physical resource env (``with mesh:``). None when absent."""
