@@ -3,11 +3,13 @@ from __future__ import annotations
 
 import json
 import os
+import platform
 import time
 from typing import Callable, Dict, List
 
 import numpy as np
 
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 
@@ -27,6 +29,27 @@ def load_rows(name: str):
         with open(p) as f:
             return json.load(f)
     return None
+
+
+def save_bench(name: str, results: List[Dict]) -> str:
+    """Machine-readable benchmark artifact: ``BENCH_<name>.json`` at the repo
+    root, for CI trend tracking and regression gates. ``results`` is the
+    same row list the figure scripts cache/emit; the envelope adds the
+    backend and a timestamp so artifacts from different hosts are
+    distinguishable."""
+    import jax
+
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    payload = {
+        "name": name,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "timestamp": time.time(),
+        "results": results,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+    return path
 
 
 def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -10,7 +10,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import load_rows, save_rows
+from benchmarks.common import load_rows, save_bench, save_rows
 from repro.configs.fcpo import FCPOConfig
 from repro.core import federated as fed
 from repro.core.fleet import (fleet_init, train_fleet, train_fleet_reference,
@@ -101,8 +101,10 @@ def run(quick: bool = True):
 
 
 def main(quick: bool = True):
+    rows = run(quick)
+    save_bench("fig14_frl_scaling", rows)
     out = []
-    for r in run(quick):
+    for r in rows:
         if "wall_warm_s" in r:
             out.append({
                 "name": r["name"],

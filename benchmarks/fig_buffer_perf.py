@@ -1,0 +1,135 @@
+"""Diversity-buffer engine A/B: recompute-oracle inserts vs the
+streaming-moment engine on the CRL episode hot path.
+
+Three drivers over identical fleets/traces/seeds (A agents × T control
+intervals, buffer capacity N):
+
+  * ``reference`` — the seed implementation: ``buffer_insert_reference``
+    inside the episode ``lax.scan``, rebuilding the N×D covariance and
+    running a dense ``linalg.solve`` every step, vmapped over the fleet.
+  * ``streaming`` — the production path: scan body is env+policy only,
+    one ``buffer_insert_batch`` (jnp streaming scan, O(D²)/candidate,
+    LAPACK-free Cholesky) ingests the whole episode afterwards.
+  * ``pallas`` — same, routed through the fused ``diversity_insert`` kernel
+    (interpret mode on CPU, so this row is informational off-TPU).
+
+Reported: warm wall clock per episode batch, speedup vs reference, and the
+equivalence drift (identical evicted slots; max |score| difference) between
+the reference and streaming buffers — the acceptance gate mirrored by
+tests/test_buffer.py.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_bench, save_rows, time_call
+from repro.configs.fcpo import FCPOConfig
+from repro.core.crl import run_episode, run_episode_reference
+from repro.core.fleet import fleet_init
+from repro.data.workload import fleet_traces
+
+
+def _drivers(cfg):
+    def vm(fn):
+        return jax.jit(jax.vmap(
+            lambda ep, st, r, m: fn(cfg, ep, st, r, m)[:2]))
+
+    return {
+        "reference": vm(run_episode_reference),
+        "streaming": vm(run_episode),
+        "pallas": vm(lambda c, ep, st, r, m: run_episode(
+            c, ep, st, r, m, use_pallas=True)),
+    }
+
+
+def run_ab(n_agents=256, t_steps=64, buffer_n=64, iters=10, with_pallas=True):
+    cfg = FCPOConfig(buffer_size=buffer_n)
+    fleet = fleet_init(cfg, n_agents, jax.random.PRNGKey(0))
+    rates = fleet_traces(jax.random.PRNGKey(1), n_agents, t_steps)
+    drivers = _drivers(cfg)
+    if not with_pallas:
+        drivers.pop("pallas")
+
+    rows, bufs = [], {}
+    for name, fn in drivers.items():
+        us = time_call(fn, fleet.env_params, fleet.astate, rates, fleet.masks,
+                       iters=iters)
+        out = fn(fleet.env_params, fleet.astate, rates, fleet.masks)
+        bufs[name] = jax.device_get(out[0].buffer)
+        rows.append({"name": f"buffer_{name}", "us_per_call": us,
+                     "agents": n_agents, "steps": t_steps,
+                     "buffer_size": buffer_n})
+
+    ref = bufs["reference"]
+    for row in rows:
+        b = bufs[row["name"].removeprefix("buffer_")]
+        finite = lambda x: np.nan_to_num(x, posinf=0.0, neginf=0.0)
+        row["same_slots"] = bool((b.states == ref.states).all()
+                                 & (b.filled == ref.filled).all())
+        row["score_drift"] = float(
+            np.max(np.abs(finite(b.score) - finite(ref.score))))
+        row["speedup_vs_reference"] = rows[0]["us_per_call"] / row["us_per_call"]
+    return rows
+
+
+def run(quick: bool = True, smoke: bool = False, fresh: bool = False):
+    """Raw benchmark rows. ``smoke``: tiny CI shapes, never cached.
+    ``fresh``: bypass the artifact cache (a regression gate must measure
+    this run, not a stale artifact). ``quick=False`` triples the timing
+    iterations for a stabler median at the same A/T/N acceptance shapes."""
+    if smoke:
+        return run_ab(n_agents=8, t_steps=8, buffer_n=8, iters=3)
+    if not fresh:
+        cached = load_rows("fig_buffer_perf")
+        if cached:
+            return cached
+    rows = run_ab(iters=10 if quick else 30)
+    save_rows("fig_buffer_perf", rows)
+    return rows
+
+
+def format_rows(rows):
+    return [{
+        "name": r["name"],
+        "us_per_call": f"{r['us_per_call']:.0f}",
+        "derived": (f"A={r['agents']} T={r['steps']} N={r['buffer_size']} "
+                    f"speedup={r['speedup_vs_reference']:.2f}x "
+                    f"same_slots={r['same_slots']} "
+                    f"score_drift={r['score_drift']:.1e}"),
+    } for r in rows]
+
+
+def _run_and_save(quick: bool = True, smoke: bool = False,
+                  fresh: bool = False):
+    rows = run(quick, smoke=smoke, fresh=fresh)
+    save_bench("buffer_perf" + ("_smoke" if smoke else ""), rows)
+    return rows
+
+
+def main(quick: bool = True, smoke: bool = False):
+    return format_rows(_run_and_save(quick, smoke=smoke))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit_csv
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI perf-path regression checks")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit nonzero unless streaming beats reference by "
+                         "this factor (always re-measures; never gates on "
+                         "cached rows)")
+    args = ap.parse_args()
+    raw = _run_and_save(smoke=args.smoke,
+                        fresh=args.min_speedup is not None)
+    emit_csv(format_rows(raw))
+    if args.min_speedup is not None:
+        stream = next(r for r in raw if r["name"] == "buffer_streaming")
+        speedup = stream["speedup_vs_reference"]
+        assert speedup >= args.min_speedup, (
+            f"streaming speedup {speedup:.2f}x < required "
+            f"{args.min_speedup:.2f}x")

@@ -2,7 +2,8 @@
 from repro.configs.fcpo import FCPOConfig, DEFAULT  # noqa: F401
 from repro.core.agent import (ActionMask, agent_forward, agent_init,  # noqa: F401
                               full_mask, sample_actions)
-from repro.core.buffer import DiversityBuffer, buffer_init, buffer_insert  # noqa: F401
+from repro.core.buffer import (DiversityBuffer, buffer_init, buffer_insert,  # noqa: F401
+                               buffer_insert_batch, buffer_insert_reference)
 from repro.core.crl import AgentState, crl_episode, run_episode  # noqa: F401
 from repro.core.env import EnvParams, EnvState, default_env_params, env_init, env_step  # noqa: F401
 from repro.core.federated import aggregate, select_clients  # noqa: F401

@@ -10,6 +10,21 @@ fixed arrays of capacity N; a new experience replaces the *lowest-diversity*
 slot iff its own diversity exceeds that slot's score (until the buffer is
 full, it always inserts). Memory is therefore hard-bounded — the paper's
 answer to BCEdge-style 5000+-experience replay buffers.
+
+Two scoring engines share those eviction semantics:
+
+  * **Streaming moments** (the production path — ``buffer_insert`` /
+    ``buffer_insert_batch``): the buffer carries running sufficient
+    statistics (state sum, outer-product sum, probs sum, filled count) that
+    are rank-1 updated on every insert/evict, so Eq. 6 is O(D²) per
+    candidate and never touches the N stored slots. The covariance solve is
+    a LAPACK-free unrolled Cholesky (``repro.kernels.ref``), which keeps the
+    whole engine legal inside lax.scan, vmap, and the fused Pallas
+    ``diversity_insert`` kernel.
+  * **Recompute oracle** (``buffer_insert_reference``): the original
+    O(N·D²+D³) per-insert implementation that rebuilds the covariance from
+    the stored slots and runs a dense ``linalg.solve`` — kept slot-for-slot
+    equivalence-tested against the streaming engine (tests/test_buffer.py).
 """
 from __future__ import annotations
 
@@ -19,6 +34,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.fcpo import FCPOConfig
+from repro.kernels import ref as kref
+
+RIDGE = 0.1  # ε·I covariance regularizer (keeps D_M defined before fill-up)
 
 
 class DiversityBuffer(NamedTuple):
@@ -31,6 +49,11 @@ class DiversityBuffer(NamedTuple):
     score: jnp.ndarray    # (N,) stored diversity score
     filled: jnp.ndarray   # (N,) bool
     count: jnp.ndarray    # () int32 total insertions attempted
+    # --- streaming sufficient statistics over the filled slots ---
+    s_sum: jnp.ndarray    # (8,)   Σ s
+    s_outer: jnp.ndarray  # (8, 8) Σ s sᵀ
+    p_sum: jnp.ndarray    # (n_res+n_bs+n_mt,) Σ probs
+    n_filled: jnp.ndarray  # () int32 number of filled slots
 
 
 def buffer_init(cfg: FCPOConfig) -> DiversityBuffer:
@@ -42,21 +65,26 @@ def buffer_init(cfg: FCPOConfig) -> DiversityBuffer:
         logp=jnp.zeros((n,)),
         rewards=jnp.zeros((n,)),
         values=jnp.zeros((n,)),
-        probs=jnp.full((n, na), 1.0 / na),
-        score=jnp.full((n,), -jnp.inf),
+        probs=jnp.full((n, na), 1.0 / na, jnp.float32),
+        score=jnp.full((n,), -jnp.inf, jnp.float32),
         filled=jnp.zeros((n,), bool),
         count=jnp.zeros((), jnp.int32),
+        s_sum=jnp.zeros((cfg.state_dim,)),
+        s_outer=jnp.zeros((cfg.state_dim, cfg.state_dim)),
+        p_sum=jnp.zeros((na,)),
+        n_filled=jnp.zeros((), jnp.int32),
     )
 
 
 def mahalanobis(state, states, filled):
-    """D_M of ``state`` against the filled subset of ``states`` with a
-    regularized covariance (ε·I keeps it defined before the buffer fills)."""
+    """Recompute-oracle D_M of ``state`` against the filled subset of
+    ``states`` with a regularized covariance (ε·I keeps it defined before
+    the buffer fills)."""
     w = filled.astype(jnp.float32)
     n = jnp.maximum(w.sum(), 1.0)
     mu = (states * w[:, None]).sum(0) / n
     diff_all = (states - mu) * w[:, None]
-    cov = diff_all.T @ diff_all / n + 0.1 * jnp.eye(state.shape[-1])
+    cov = diff_all.T @ diff_all / n + RIDGE * jnp.eye(state.shape[-1])
     diff = state - mu
     return jnp.sqrt(jnp.maximum(diff @ jnp.linalg.solve(cov, diff), 0.0))
 
@@ -68,7 +96,8 @@ def kl_divergence(p, q, eps=1e-8):
 
 
 def diversity(cfg: FCPOConfig, buf: DiversityBuffer, state, probs):
-    """Eq. 6 for one candidate experience."""
+    """Eq. 6 for one candidate experience — recompute oracle (rebuilds the
+    covariance and mean policy from the N stored slots)."""
     d_m = mahalanobis(state, buf.states, buf.filled)
     w = buf.filled.astype(jnp.float32)
     mean_probs = ((buf.probs * w[:, None]).sum(0)
@@ -78,38 +107,152 @@ def diversity(cfg: FCPOConfig, buf: DiversityBuffer, state, probs):
     return cfg.alpha * d_m + cfg.beta * d_kl
 
 
+def _scatter_payload(buf: DiversityBuffer, idx, do, action, logp, reward,
+                     value) -> DiversityBuffer:
+    """Write the non-scored payload of one accepted candidate to slot idx."""
+    def set_at(arr, val):
+        return jnp.where(do, arr.at[idx].set(val), arr)
+
+    return buf._replace(actions=set_at(buf.actions, action),
+                        logp=set_at(buf.logp, logp),
+                        rewards=set_at(buf.rewards, reward),
+                        values=set_at(buf.values, value),
+                        count=buf.count + 1)
+
+
 def buffer_insert(cfg: FCPOConfig, buf: DiversityBuffer, state, action, logp,
                   reward, value, probs) -> DiversityBuffer:
-    """Insert by diversity: empty slot if any, else evict the min-score slot
-    when the candidate is more diverse."""
+    """Streaming-moment insert: Eq. 6 scored from the running statistics
+    (O(D²), never touches the N stored slots), then empty-slot /
+    min-score-evict placement identical to the recompute oracle."""
+    (states, probs_b, score, filled, s_sum, s_outer, p_sum, n_filled), \
+        (idx, do, _d) = kref.diversity_insert_step(
+            buf.states, buf.probs, buf.score, buf.filled, buf.s_sum,
+            buf.s_outer, buf.p_sum, buf.n_filled, state, probs,
+            alpha=cfg.alpha, beta=cfg.beta, ridge=RIDGE)
+    buf = buf._replace(states=states, probs=probs_b, score=score,
+                       filled=filled, s_sum=s_sum, s_outer=s_outer,
+                       p_sum=p_sum, n_filled=n_filled)
+    return _scatter_payload(buf, idx, do, action, logp, reward, value)
+
+
+def buffer_insert_reference(cfg: FCPOConfig, buf: DiversityBuffer, state,
+                            action, logp, reward, value, probs
+                            ) -> DiversityBuffer:
+    """The original recompute-everything insert (equivalence oracle): builds
+    the full covariance from the stored slots and solves it per candidate.
+    Maintains the streaming moments too, so reference-built buffers stay
+    valid inputs for the streaming engine."""
     d = diversity(cfg, buf, state, probs)
     has_empty = ~jnp.all(buf.filled)
     empty_idx = jnp.argmin(buf.filled)            # first False
     min_idx = jnp.argmin(jnp.where(buf.filled, buf.score, jnp.inf))
     idx = jnp.where(has_empty, empty_idx, min_idx)
-    do_insert = has_empty | (d > buf.score[min_idx])
+    do = has_empty | (d > buf.score[min_idx])
+
+    old_s, old_p = buf.states[idx], buf.probs[idx]
+    evict = do & buf.filled[idx]
+    add = do.astype(buf.s_sum.dtype)
+    sub = evict.astype(buf.s_sum.dtype)
 
     def set_at(arr, val):
-        return jnp.where(do_insert, arr.at[idx].set(val), arr)
+        return jnp.where(do, arr.at[idx].set(val), arr)
 
-    return DiversityBuffer(
+    buf = buf._replace(
         states=set_at(buf.states, state),
-        actions=set_at(buf.actions, action),
-        logp=set_at(buf.logp, logp),
-        rewards=set_at(buf.rewards, reward),
-        values=set_at(buf.values, value),
         probs=set_at(buf.probs, probs),
         score=set_at(buf.score, d),
         filled=set_at(buf.filled, True),
-        count=buf.count + 1,
+        s_sum=buf.s_sum + add * state - sub * old_s,
+        s_outer=(buf.s_outer + add * jnp.outer(state, state)
+                 - sub * jnp.outer(old_s, old_s)),
+        p_sum=buf.p_sum + add * probs - sub * old_p,
+        n_filled=(buf.n_filled + do.astype(buf.n_filled.dtype)
+                  - evict.astype(buf.n_filled.dtype)),
     )
+    return _scatter_payload(buf, idx, do, action, logp, reward, value)
+
+
+def buffer_insert_batch(cfg: FCPOConfig, buf: DiversityBuffer, states,
+                        actions, logp, rewards, values, probs,
+                        use_pallas: bool = False) -> DiversityBuffer:
+    """Ingest a whole episode of T candidates in one call (leading dim T on
+    every candidate array). The sequential score → argmin-evict → scatter
+    chain runs through the streaming engine — the jnp scan oracle by
+    default, the fused Pallas kernel with ``use_pallas=True`` — and the
+    non-scored payload is scattered afterwards by last-writer-wins on the
+    decision trace, which is embarrassingly parallel."""
+    t_steps, n = states.shape[0], buf.score.shape[0]
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.diversity_insert(buf.states, buf.probs, buf.score,
+                                    buf.filled, buf.s_sum, buf.s_outer,
+                                    buf.p_sum, buf.n_filled, states, probs,
+                                    alpha=cfg.alpha, beta=cfg.beta,
+                                    ridge=RIDGE)
+    else:
+        out = kref.diversity_insert_ref(buf.states, buf.probs, buf.score,
+                                        buf.filled, buf.s_sum, buf.s_outer,
+                                        buf.p_sum, buf.n_filled, states,
+                                        probs, alpha=cfg.alpha, beta=cfg.beta,
+                                        ridge=RIDGE)
+    (new_states, new_probs, new_score, new_filled, s_sum, s_outer, p_sum,
+     n_filled, slot, do, _d) = out
+
+    # Last writer per slot: the highest t with do[t] & slot[t]==n wins.
+    ts = jnp.arange(t_steps)
+    hits = (slot[None, :] == jnp.arange(n)[:, None]) & do[None, :]  # (N, T)
+    last = jnp.max(jnp.where(hits, ts[None, :], -1), axis=1)        # (N,)
+
+    def scatter(old, cand):
+        gathered = cand[jnp.clip(last, 0, t_steps - 1)]
+        keep = (last < 0).reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(keep, old, gathered)
+
+    return buf._replace(
+        states=new_states, probs=new_probs, score=new_score,
+        filled=new_filled, s_sum=s_sum, s_outer=s_outer, p_sum=p_sum,
+        n_filled=n_filled,
+        actions=scatter(buf.actions, actions),
+        logp=scatter(buf.logp, logp),
+        rewards=scatter(buf.rewards, rewards),
+        values=scatter(buf.values, values),
+        count=buf.count + t_steps,
+    )
+
+
+def buffer_resync(buf: DiversityBuffer) -> DiversityBuffer:
+    """Recompute the streaming moments from the stored slots — the periodic
+    resync that bounds float32 rank-1 add/subtract drift over long runs.
+    O(N·D²) per agent, so it belongs on the FL-round cadence (``fl_round``
+    calls it), never on the per-step hot path. Works on fleet-stacked
+    buffers (vmapped callers see unbatched leaves)."""
+    w = buf.filled.astype(buf.s_sum.dtype)
+    return buf._replace(
+        s_sum=(buf.states * w[:, None]).sum(0),
+        s_outer=jnp.einsum("nd,ne->de", buf.states * w[:, None], buf.states),
+        p_sum=(buf.probs * w[:, None]).sum(0),
+        n_filled=buf.filled.sum().astype(buf.n_filled.dtype),
+    )
+
+
+def buffer_diversity_mean(buf: DiversityBuffer) -> jnp.ndarray:
+    """Mean stored diversity over capacity — the Eq. 7 "data diversity"
+    client-selection stat read by ``fl_round``. Works on fleet-stacked
+    buffers (reduces the trailing slot axis)."""
+    return jnp.where(buf.filled, buf.score, 0.0).mean(-1)
 
 
 def buffer_clear(buf: DiversityBuffer) -> DiversityBuffer:
     """Emptied frequently under online CRL (§IV-C) — keeps memory small and
-    experiences fresh after each training consumption."""
+    experiences fresh after each training consumption. Resets the streaming
+    moments along with the slot metadata."""
     return buf._replace(filled=jnp.zeros_like(buf.filled),
-                        score=jnp.full_like(buf.score, -jnp.inf))
+                        score=jnp.full_like(buf.score, -jnp.inf),
+                        s_sum=jnp.zeros_like(buf.s_sum),
+                        s_outer=jnp.zeros_like(buf.s_outer),
+                        p_sum=jnp.zeros_like(buf.p_sum),
+                        n_filled=jnp.zeros_like(buf.n_filled))
 
 
 def buffer_memory_bytes(cfg: FCPOConfig) -> int:

@@ -1,10 +1,16 @@
 """Continual RL driver (§IV-C): episode rollout + gated online update.
 
 ``run_episode`` scans ``n_steps`` control intervals: observe -> sample
-cascaded actions -> env step -> diversity-buffer insert. ``crl_episode``
-additionally performs the online update from the episode rollout through the
-loss gate. Everything is a pure function of (params, opt, buffer, env_state,
-rng) so a fleet of agents is just a ``vmap`` over stacked states.
+cascaded actions -> env step. The diversity-buffer maintenance is hoisted
+OUT of the scan body: the buffer is write-only during a rollout, so the
+whole episode's candidates are ingested after the scan with ONE
+``buffer_insert_batch`` call through the streaming-moment engine — the scan
+body stays env+policy only and the per-step O(N·D²+D³) covariance rebuild of
+the old insert path disappears from the hot loop (benchmarks/
+fig_buffer_perf.py measures the A/B). ``crl_episode`` additionally performs
+the online update from the episode rollout through the loss gate. Everything
+is a pure function of (params, opt, buffer, env_state, rng) so a fleet of
+agents is just a ``vmap`` over stacked states.
 """
 from __future__ import annotations
 
@@ -16,7 +22,8 @@ import jax.numpy as jnp
 from repro.configs.fcpo import FCPOConfig
 from repro.core import env as env_mod
 from repro.core.agent import ActionMask, sample_actions
-from repro.core.buffer import DiversityBuffer, buffer_insert
+from repro.core.buffer import (DiversityBuffer, buffer_insert_batch,
+                               buffer_insert_reference)
 from repro.core.ppo import Rollout, agent_update
 
 
@@ -29,9 +36,59 @@ class AgentState(NamedTuple):
 
 
 def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
-                rates: jnp.ndarray, mask: ActionMask
+                rates: jnp.ndarray, mask: ActionMask,
+                use_pallas: bool = False
                 ) -> Tuple[AgentState, Rollout, Dict[str, jnp.ndarray]]:
-    """Collect one episode (rates: (n_steps,) arrivals per interval)."""
+    """Collect one episode (rates: (n_steps,) arrivals per interval).
+
+    The buffer never feeds back into the policy or env within an episode, so
+    the scan collects the candidate experiences and a single
+    ``buffer_insert_batch`` ingests them afterwards — trajectory-identical to
+    per-step inserts (tests/test_buffer.py) but with the diversity scoring
+    off the step critical path. ``use_pallas`` routes the batch insert
+    through the fused Pallas kernel instead of the jnp streaming scan."""
+
+    def step(carry, rate):
+        est, rng = carry
+        rng, krng = jax.random.split(rng)
+        obs = env_mod.observe(cfg, ep, est, rate)
+        actions, logp, out = sample_actions(cfg, astate.params, obs, mask, krng)
+        est2, reward, info = env_mod.env_step(cfg, ep, est, actions, rate)
+        probs = jnp.concatenate([jnp.exp(out["res"]), jnp.exp(out["bs"]),
+                                 jnp.exp(out["mt"])], axis=-1)
+        ys = (obs, actions, logp, reward, out["value"], probs, info)
+        return (est2, rng), ys
+
+    (env_state, rng), ys = jax.lax.scan(
+        step, (astate.env_state, astate.rng), rates)
+    obs, actions, logp, rewards, values, probs, infos = ys
+    buffer = buffer_insert_batch(cfg, astate.buffer, obs, actions, logp,
+                                 rewards, values, probs,
+                                 use_pallas=use_pallas)
+    rollout = Rollout(states=obs, actions=actions, logp_old=logp,
+                      rewards=rewards, values_old=values)
+    metrics = {
+        "reward": rewards.mean(),
+        "throughput": infos["throughput"].mean(),
+        "effective_throughput": infos["effective_throughput"].mean(),
+        "latency": infos["latency"].mean(),
+        "drops": infos["drops"].mean(),
+        "accuracy_proxy": infos["accuracy_proxy"].mean(),
+    }
+    new_state = AgentState(astate.params, astate.opt, buffer, env_state, rng)
+    return new_state, rollout, metrics
+
+
+def run_episode_reference(cfg: FCPOConfig, ep: env_mod.EnvParams,
+                          astate: AgentState, rates: jnp.ndarray,
+                          mask: ActionMask
+                          ) -> Tuple[AgentState, Rollout,
+                                     Dict[str, jnp.ndarray]]:
+    """The seed episode loop: per-step recompute-oracle buffer inserts
+    sequentially inside the scan. Kept as the equivalence oracle for the
+    restructured ``run_episode`` (tests/test_buffer.py) and the A/B baseline
+    for benchmarks/fig_buffer_perf.py — one definition so both measure the
+    same loop."""
 
     def step(carry, rate):
         est, buf, rng = carry
@@ -41,8 +98,8 @@ def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
         est2, reward, info = env_mod.env_step(cfg, ep, est, actions, rate)
         probs = jnp.concatenate([jnp.exp(out["res"]), jnp.exp(out["bs"]),
                                  jnp.exp(out["mt"])], axis=-1)
-        buf = buffer_insert(cfg, buf, obs, actions, logp, reward,
-                            out["value"], probs)
+        buf = buffer_insert_reference(cfg, buf, obs, actions, logp, reward,
+                                      out["value"], probs)
         ys = (obs, actions, logp, reward, out["value"], info)
         return (est2, buf, rng), ys
 

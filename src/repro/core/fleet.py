@@ -33,7 +33,8 @@ from repro.configs.fcpo import FCPOConfig
 from repro.core import env as env_mod
 from repro.core import federated as fed
 from repro.core.agent import ActionMask, agent_init, full_mask
-from repro.core.buffer import buffer_init
+from repro.core.buffer import (buffer_diversity_mean, buffer_init,
+                               buffer_resync)
 from repro.core.crl import AgentState, crl_episode
 from repro.core.ppo import agent_opt_init, finetune_heads
 from repro.distributed import sharding as shd
@@ -171,8 +172,7 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None):
     if available is None:
         available = jnp.ones((a,), bool)
 
-    div = jnp.where(fleet.astate.buffer.filled, fleet.astate.buffer.score,
-                    0.0).mean(-1)
+    div = buffer_diversity_mean(fleet.astate.buffer)
     stats = fed.ClientStats(
         mem_avail=jnp.clip(1.0 - fleet.astate.env_state.pre_q
                            / fleet.env_params.queue_cap, 0, 1),
@@ -196,7 +196,10 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None):
         lambda p, o, r, m: finetune_heads(cfg, p, o, r, m)
     )(new_params, fleet.astate.opt, rollouts, fleet.masks)
 
-    astate = fleet.astate._replace(params=params, opt=opt)
+    # FL-round cadence is the off-hot-path slot to resync the buffers'
+    # streaming moments from their slots, bounding rank-1 float32 drift.
+    buffers = jax.vmap(buffer_resync)(fleet.astate.buffer)
+    astate = fleet.astate._replace(params=params, opt=opt, buffer=buffers)
     return fleet._replace(astate=astate, base_params=new_base), sel
 
 

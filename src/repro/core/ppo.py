@@ -148,12 +148,16 @@ def finetune_heads(cfg: FCPOConfig, params, opt, rollout: Rollout,
     freeze = {k: jax.tree.map(lambda _: k in ("backbone", "value"), v)
               for k, v in params.items()}
 
+    # The rollout is constant across fine-tune steps and the advantage term
+    # carries no parameter dependence, so GAE runs once here instead of
+    # inside every scanned grad step.
+    adv = gae(cfg, rollout.rewards, rollout.values_old)
+    adv = (adv - adv.mean()) / (adv.std() + 1e-6)
+    factor = -adv + jnp.exp(-rollout.rewards)
+
     def policy_only_loss(p):
         logp, _, _ = action_logp(cfg, p, rollout.states, rollout.actions, mask)
         ratio = jnp.exp(logp - rollout.logp_old)
-        adv = gae(cfg, rollout.rewards, rollout.values_old)
-        adv = (adv - adv.mean()) / (adv.std() + 1e-6)
-        factor = -adv + jnp.exp(-rollout.rewards)
         return jnp.mean(jnp.minimum(cfg.eps_clip * ratio, ratio) * factor)
 
     def body(carry, _):

@@ -1,0 +1,151 @@
+"""Pallas fused diversity-insert kernel — the CRL buffer hot path (Eq. 6).
+
+One grid step per agent ingests a whole episode of T candidate experiences
+into that agent's diversity buffer: score from the streaming moments ->
+argmin-evict slot choice -> scatter + rank-1 moment update, fused into a
+single kernel so the per-candidate sequential chain never leaves on-chip
+memory. The buffer slots (N, D), the moments, and the T candidates all live
+in VMEM for the duration of the episode — the only HBM traffic is one load
+and one store of the agent's buffer state (≈ N·(D+NA) floats) per episode
+instead of T round trips.
+
+The scoring math is imported from ``repro.kernels.ref`` — the same unrolled
+LAPACK-free Cholesky the jnp oracle uses — so kernel and oracle agree to
+float32 roundoff (equivalence-tested in tests/test_buffer.py). On this CPU
+container the kernel executes with ``interpret=True`` (same body,
+XLA-CPU execution); on TPU the same call site compiles to Mosaic.
+
+Booleans cross the kernel boundary as int32 (0/1) masks — TPU vector memory
+has no i1 lanes; the ops wrapper converts at the edges.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as kref
+
+
+def _diversity_kernel(states_ref, probs_ref, score_ref, filled_ref, ssum_ref,
+                      souter_ref, psum_ref, nfill_ref, cs_ref, cp_ref,
+                      o_states, o_probs, o_score, o_filled, o_ssum, o_souter,
+                      o_psum, o_nfill, o_slot, o_do, o_d,
+                      *, alpha, beta, ridge, t_steps):
+    # Seed the in-place slot state once; the candidate loop mutates it.
+    o_states[...] = states_ref[...]
+    o_probs[...] = probs_ref[...]
+    o_score[...] = score_ref[...]
+    o_filled[...] = filled_ref[...]
+
+    def body(t, carry):
+        s_sum, s_outer, p_sum, n_filled = carry
+        s = cs_ref[0, pl.ds(t, 1), :][0]            # (D,)
+        p = cp_ref[0, pl.ds(t, 1), :][0]            # (NA,)
+        score = o_score[0, :]                        # (N,)
+
+        d = kref.diversity_score_from_moments(
+            s, p, s_sum, s_outer, p_sum, n_filled,
+            alpha=alpha, beta=beta, ridge=ridge)
+
+        # Score invariant (see diversity_insert_ref): empty slots hold -inf,
+        # so one argmin picks first-empty-else-min-filled and d > min(score)
+        # is the insert test in both regimes.
+        minval = jnp.min(score)
+        idx = jnp.argmin(score).astype(jnp.int32)
+        do = d > minval
+        evict = do & (minval != -jnp.inf)
+
+        old_s = o_states[0, pl.ds(idx, 1), :][0]
+        old_p = o_probs[0, pl.ds(idx, 1), :][0]
+        add = do.astype(s_sum.dtype)
+        sub = evict.astype(s_sum.dtype)
+        carry = (
+            s_sum + add * s - sub * old_s,
+            s_outer + add * jnp.outer(s, s) - sub * jnp.outer(old_s, old_s),
+            p_sum + add * p - sub * old_p,
+            n_filled + do.astype(n_filled.dtype) - evict.astype(n_filled.dtype),
+        )
+
+        @pl.when(do)
+        def _scatter():
+            o_states[0, pl.ds(idx, 1), :] = s[None]
+            o_probs[0, pl.ds(idx, 1), :] = p[None]
+            o_score[0, pl.ds(idx, 1)] = d[None]
+            o_filled[0, pl.ds(idx, 1)] = jnp.ones((1,), jnp.int32)
+
+        o_slot[0, pl.ds(t, 1)] = idx[None]
+        o_do[0, pl.ds(t, 1)] = do.astype(jnp.int32)[None]
+        o_d[0, pl.ds(t, 1)] = d[None]
+        return carry
+
+    init = (ssum_ref[0, :], souter_ref[0], psum_ref[0, :], nfill_ref[0])
+    s_sum, s_outer, p_sum, n_filled = jax.lax.fori_loop(
+        0, t_steps, body, init)
+    o_ssum[0, :] = s_sum
+    o_souter[0] = s_outer
+    o_psum[0, :] = p_sum
+    o_nfill[0] = n_filled
+
+
+def diversity_insert(states, probs, score, filled, s_sum, s_outer, p_sum,
+                     n_filled, cand_states, cand_probs, *, alpha, beta,
+                     ridge=0.1, interpret=False):
+    """Fused batch insert over the agent axis.
+
+    states: (A, N, D) [or unbatched (N, D) — a singleton agent axis is added
+    and squeezed]; cand_states: (A, T, D); filled: bool. Returns the same
+    tuple as ``ref.diversity_insert_ref`` batched over A: updated
+    (states, probs, score, filled, s_sum, s_outer, p_sum, n_filled) plus the
+    per-candidate decision trace (slot, do_insert, d)."""
+    unbatched = states.ndim == 2
+    if unbatched:
+        (states, probs, score, filled, s_sum, s_outer, p_sum, n_filled,
+         cand_states, cand_probs) = jax.tree.map(
+            lambda x: x[None], (states, probs, score, filled, s_sum, s_outer,
+                                p_sum, n_filled, cand_states, cand_probs))
+    a, n, dim = states.shape
+    t_steps, na = cand_probs.shape[1], cand_probs.shape[2]
+    f32, i32 = jnp.float32, jnp.int32
+
+    kernel = functools.partial(_diversity_kernel, alpha=alpha, beta=beta,
+                               ridge=ridge, t_steps=t_steps)
+    spec = lambda *shape: pl.BlockSpec(
+        (1,) + shape, lambda a_: (a_,) + (0,) * len(shape))
+    out = pl.pallas_call(
+        kernel,
+        grid=(a,),
+        in_specs=[spec(n, dim), spec(n, na), spec(n), spec(n), spec(dim),
+                  spec(dim, dim), spec(na), spec(), spec(t_steps, dim),
+                  spec(t_steps, na)],
+        out_specs=[spec(n, dim), spec(n, na), spec(n), spec(n), spec(dim),
+                   spec(dim, dim), spec(na), spec(), spec(t_steps),
+                   spec(t_steps), spec(t_steps)],
+        out_shape=[
+            jax.ShapeDtypeStruct((a, n, dim), f32),
+            jax.ShapeDtypeStruct((a, n, na), f32),
+            jax.ShapeDtypeStruct((a, n), f32),
+            jax.ShapeDtypeStruct((a, n), i32),
+            jax.ShapeDtypeStruct((a, dim), f32),
+            jax.ShapeDtypeStruct((a, dim, dim), f32),
+            jax.ShapeDtypeStruct((a, na), f32),
+            jax.ShapeDtypeStruct((a,), i32),
+            jax.ShapeDtypeStruct((a, t_steps), i32),
+            jax.ShapeDtypeStruct((a, t_steps), i32),
+            jax.ShapeDtypeStruct((a, t_steps), f32),
+        ],
+        interpret=interpret,
+    )(states.astype(f32), probs.astype(f32), score.astype(f32),
+      filled.astype(i32), s_sum.astype(f32), s_outer.astype(f32),
+      p_sum.astype(f32), n_filled.astype(i32), cand_states.astype(f32),
+      cand_probs.astype(f32))
+
+    (n_states, n_probs, n_score, n_filled_i, n_ssum, n_souter, n_psum,
+     n_nfill, slot, do, d) = out
+    result = (n_states, n_probs, n_score, n_filled_i.astype(bool), n_ssum,
+              n_souter, n_psum, n_nfill, slot, do.astype(bool), d)
+    if unbatched:
+        result = jax.tree.map(lambda x: x[0], result)
+    return result

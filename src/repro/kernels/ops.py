@@ -15,6 +15,7 @@ import os
 import jax
 
 from repro.kernels import decode_attention as _dec
+from repro.kernels import diversity as _div
 from repro.kernels import flash_attention as _fa
 from repro.kernels import packing as _pack
 
@@ -41,3 +42,16 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, bk=512):
 @jax.jit
 def pack(tokens, indices):
     return _pack.pack(tokens, indices, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "ridge"))
+def diversity_insert(states, probs, score, filled, s_sum, s_outer, p_sum,
+                     n_filled, cand_states, cand_probs, *, alpha, beta,
+                     ridge=0.1):
+    """Fused streaming diversity-buffer insert (Eq. 6): score ->
+    argmin-evict -> scatter over T candidates per agent, one kernel call for
+    the whole agent batch. Oracle: ``repro.kernels.ref.diversity_insert_ref``."""
+    return _div.diversity_insert(states, probs, score, filled, s_sum,
+                                 s_outer, p_sum, n_filled, cand_states,
+                                 cand_probs, alpha=alpha, beta=beta,
+                                 ridge=ridge, interpret=_interpret_default())

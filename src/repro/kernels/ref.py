@@ -50,3 +50,172 @@ def pack_ref(tokens, indices):
     safe = jnp.clip(indices, 0, tokens.shape[0] - 1)
     out = tokens[safe]
     return jnp.where((indices >= 0)[:, None], out, 0).astype(tokens.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Streaming-moment diversity insert (Eq. 6 engine) — shared math + jnp oracle
+# ---------------------------------------------------------------------------
+# The helpers below are the single source of truth for the streaming buffer
+# math: the jnp batch path (``diversity_insert_ref``), the single-insert path
+# in ``repro.core.buffer``, and the Pallas kernel body all call them, so the
+# three implementations cannot drift. Everything is unrolled over the static
+# state dimension D (= 8), which keeps the math LAPACK-free: it compiles to a
+# fixed chain of vector ops that is legal inside jit, vmap, lax.scan, and a
+# Pallas kernel alike (``jnp.linalg`` custom calls are none of those).
+
+def chol_small(cov, eps=1e-12):
+    """Cholesky factor of a small static-D SPD matrix, unrolled over D."""
+    d = cov.shape[0]
+    l = jnp.zeros_like(cov)
+    for j in range(d):
+        acc = jnp.sum(l[j, :j] * l[j, :j]) if j else 0.0
+        ljj = jnp.sqrt(jnp.maximum(cov[j, j] - acc, eps))
+        l = l.at[j, j].set(ljj)
+        if j + 1 < d:
+            dots = jnp.sum(l[j + 1:, :j] * l[j, :j][None, :], -1) if j else 0.0
+            l = l.at[j + 1:, j].set((cov[j + 1:, j] - dots) / ljj)
+    return l
+
+
+def tri_solve_small(l, b):
+    """Solve L y = b (L lower-triangular) by unrolled forward substitution."""
+    d = l.shape[0]
+    y = jnp.zeros_like(b)
+    for i in range(d):
+        acc = jnp.sum(l[i, :i] * y[:i]) if i else 0.0
+        y = y.at[i].set((b[i] - acc) / l[i, i])
+    return y
+
+
+def diversity_score_from_moments(state, probs, s_sum, s_outer, p_sum,
+                                 n_filled, *, alpha, beta, ridge=0.1,
+                                 eps=1e-8):
+    """Eq. 6 score of one candidate from running sufficient statistics only.
+
+    Mahalanobis: cov = E[ssᵀ] − μμᵀ + ridge·I from (s_sum, s_outer), then
+    d_M² = ‖L⁻¹(s−μ)‖² with L the Cholesky factor — O(D²) and never touches
+    the N stored slots. KL uses the running probs sum the same way.
+    Mathematically identical to the recompute-everything oracle
+    (``repro.core.buffer.diversity``)."""
+    dim = state.shape[-1]
+    n = jnp.maximum(n_filled.astype(jnp.float32), 1.0)
+    mu = s_sum / n
+    cov = (s_outer / n - jnp.outer(mu, mu)
+           + ridge * jnp.eye(dim, dtype=s_sum.dtype))
+    y = tri_solve_small(chol_small(cov), state - mu)
+    d_m = jnp.sqrt(jnp.maximum(jnp.sum(y * y), 0.0))
+    mean_p = jnp.where(n_filled > 0, p_sum / n, probs)
+    pc = jnp.clip(probs, eps, 1.0)
+    qc = jnp.clip(mean_p, eps, 1.0)
+    d_kl = jnp.sum(pc * jnp.log(pc / qc))
+    return alpha * d_m + beta * d_kl
+
+
+def diversity_insert_step(states, probs, score, filled, s_sum, s_outer,
+                          p_sum, n_filled, cand_state, cand_probs, *,
+                          alpha, beta, ridge=0.1):
+    """One streaming insert: score -> slot choice -> rank-1 moment update.
+
+    Eviction semantics match the recompute oracle exactly: first empty slot
+    if any, else the min-score filled slot iff the candidate scores higher.
+    On insert the moments gain the candidate's rank-1 contribution; on
+    eviction of a filled slot they lose the old occupant's.
+
+    Returns ((states, probs, score, filled, s_sum, s_outer, p_sum,
+    n_filled), (slot, do_insert, score_of_candidate))."""
+    d = diversity_score_from_moments(cand_state, cand_probs, s_sum, s_outer,
+                                     p_sum, n_filled, alpha=alpha, beta=beta,
+                                     ridge=ridge)
+    has_empty = ~jnp.all(filled)
+    empty_idx = jnp.argmin(filled)                # first unfilled slot
+    min_idx = jnp.argmin(jnp.where(filled, score, jnp.inf))
+    idx = jnp.where(has_empty, empty_idx, min_idx)
+    do = has_empty | (d > score[min_idx])
+
+    old_s, old_p = states[idx], probs[idx]
+    evict = do & filled[idx]
+    add = do.astype(s_sum.dtype)
+    sub = evict.astype(s_sum.dtype)
+    s_sum = s_sum + add * cand_state - sub * old_s
+    s_outer = (s_outer + add * jnp.outer(cand_state, cand_state)
+               - sub * jnp.outer(old_s, old_s))
+    p_sum = p_sum + add * cand_probs - sub * old_p
+    n_filled = (n_filled + do.astype(n_filled.dtype)
+                - evict.astype(n_filled.dtype))
+
+    states = jnp.where(do, states.at[idx].set(cand_state), states)
+    probs = jnp.where(do, probs.at[idx].set(cand_probs), probs)
+    score = jnp.where(do, score.at[idx].set(d), score)
+    filled = jnp.where(do, filled.at[idx].set(True), filled)
+    return (states, probs, score, filled, s_sum, s_outer, p_sum, n_filled), \
+        (idx, do, d)
+
+
+def diversity_insert_ref(states, probs, score, filled, s_sum, s_outer, p_sum,
+                         n_filled, cand_states, cand_probs, *, alpha, beta,
+                         ridge=0.1):
+    """jnp oracle for the fused Pallas ``diversity_insert`` kernel: ingest T
+    candidates sequentially (single agent; vmap for a fleet).
+
+    cand_states: (T, D); cand_probs: (T, NA). Returns the updated
+    (states, probs, score, filled, s_sum, s_outer, p_sum, n_filled) plus the
+    per-candidate decision trace (slot (T,), do_insert (T,), d (T,)) the
+    caller uses to scatter the non-scored payload (actions/rewards/...).
+
+    The sequential scan carries only O(N) metadata — score and a per-slot
+    *source map* (``-1`` = original occupant, ``t`` = candidate t) — plus
+    the O(D²) moments. A slot's current occupant is gathered from the source
+    map when its rank-1 contribution must be subtracted on eviction, and the
+    (N, D)/(N, NA) slot arrays are materialized ONCE after the scan from the
+    final map, instead of being copied through every scan step.
+
+    The slot choice exploits the score invariant — empty slots hold −inf,
+    filled slots a finite Eq. 6 value — so ``argmin(score)`` alone picks the
+    first empty slot if any (all −inf ties resolve to the lowest index,
+    matching ``argmin(filled)``) else the min-score filled slot, and
+    ``d > min(score)`` is the insert test in both regimes (−inf accepts
+    everything). ``filled`` therefore never enters the scan at all.
+    Decision-for-decision identical to ``diversity_insert_step`` chained T
+    times (tests/test_buffer.py)."""
+    n = score.shape[0]
+
+    def step(carry, x):
+        score, src, s_sum, s_outer, p_sum, n_filled = carry
+        s, p, t = x
+        d = diversity_score_from_moments(s, p, s_sum, s_outer, p_sum,
+                                         n_filled, alpha=alpha, beta=beta,
+                                         ridge=ridge)
+        minval = jnp.min(score)
+        idx = jnp.argmin(score)
+        do = d > minval                  # -inf (empty slot) accepts always
+        evict = do & (minval != -jnp.inf)
+
+        si = src[idx]
+        old_s = jnp.where(si < 0, states[idx], cand_states[jnp.maximum(si, 0)])
+        old_p = jnp.where(si < 0, probs[idx], cand_probs[jnp.maximum(si, 0)])
+        add = do.astype(s_sum.dtype)
+        sub = evict.astype(s_sum.dtype)
+        carry = (
+            score.at[idx].set(jnp.where(do, d, minval)),
+            src.at[idx].set(jnp.where(do, t, si)),
+            s_sum + add * s - sub * old_s,
+            s_outer + add * jnp.outer(s, s) - sub * jnp.outer(old_s, old_s),
+            p_sum + add * p - sub * old_p,
+            n_filled + do.astype(n_filled.dtype)
+            - evict.astype(n_filled.dtype),
+        )
+        return carry, (idx, do, d)
+
+    init = (score, jnp.full((n,), -1, jnp.int32), s_sum, s_outer, p_sum,
+            n_filled)
+    xs = (cand_states, cand_probs, jnp.arange(cand_states.shape[0]))
+    (score, src, s_sum, s_outer, p_sum, n_filled), (slot, do, d) = \
+        jax.lax.scan(step, init, xs)
+
+    written = src >= 0
+    keep = (~written)[:, None]
+    states = jnp.where(keep, states, cand_states[jnp.maximum(src, 0)])
+    probs = jnp.where(keep, probs, cand_probs[jnp.maximum(src, 0)])
+    filled = filled | written
+    return states, probs, score, filled, s_sum, s_outer, p_sum, n_filled, \
+        slot, do, d

@@ -1,0 +1,238 @@
+"""Streaming-moment diversity buffer: slot-for-slot equivalence against the
+recompute oracle, batch/kernel/single-step agreement, and sufficient-
+statistic invariants. (tests the Eq. 6 engine behind benchmarks/
+fig_buffer_perf.py's ≥3x claim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.buffer import (buffer_clear, buffer_init, buffer_insert,
+                               buffer_insert_batch, buffer_insert_reference,
+                               buffer_resync, mahalanobis)
+from repro.core.crl import run_episode, run_episode_reference
+from repro.core.fleet import fleet_init
+from repro.data.workload import fleet_traces
+from repro.kernels import ref as kref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def random_candidates(key, cfg, t, scale=3.0):
+    na = cfg.n_res + cfg.n_bs + cfg.n_mt
+    ks = jax.random.split(key, 6)
+    return dict(
+        states=jax.random.normal(ks[0], (t, cfg.state_dim)) * scale,
+        actions=jax.random.randint(ks[1], (t, 3), 0, 4),
+        logp=-jnp.abs(jax.random.normal(ks[2], (t,))),
+        rewards=jnp.tanh(jax.random.normal(ks[3], (t,))),
+        values=jax.random.normal(ks[4], (t,)) * 0.1,
+        probs=jax.nn.softmax(jax.random.normal(ks[5], (t, na)), -1),
+    )
+
+
+def insert_seq(insert_fn, cfg, buf, cand):
+    fn = jax.jit(lambda b, *a: insert_fn(cfg, b, *a))
+    for t in range(cand["states"].shape[0]):
+        buf = fn(buf, cand["states"][t], cand["actions"][t], cand["logp"][t],
+                 cand["rewards"][t], cand["values"][t], cand["probs"][t])
+    return buf
+
+
+def finite(x):
+    return np.nan_to_num(np.asarray(x), posinf=0.0, neginf=0.0)
+
+
+def assert_buffers_match(a, b, score_tol=1e-4):
+    """Same slots evicted (exact payload identity) and scores within tol."""
+    np.testing.assert_array_equal(np.asarray(a.filled), np.asarray(b.filled))
+    np.testing.assert_array_equal(np.asarray(a.states), np.asarray(b.states))
+    np.testing.assert_array_equal(np.asarray(a.actions), np.asarray(b.actions))
+    np.testing.assert_array_equal(np.asarray(a.probs), np.asarray(b.probs))
+    assert np.max(np.abs(finite(a.score) - finite(b.score))) < score_tol
+
+
+class TestStreamingVsReference:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_randomized_sequences_same_evictions(self, seed):
+        """Streaming single-insert chain == recompute-oracle chain: identical
+        eviction decisions over a long randomized sequence, scores within
+        1e-4 (float32 cancellation is the only difference)."""
+        cfg = FCPOConfig(buffer_size=8)
+        cand = random_candidates(jax.random.PRNGKey(seed), cfg, 48)
+        b_ref = insert_seq(buffer_insert_reference, cfg, buffer_init(cfg), cand)
+        b_str = insert_seq(buffer_insert, cfg, buffer_init(cfg), cand)
+        assert_buffers_match(b_str, b_ref)
+        assert int(b_str.n_filled) == int(np.asarray(b_ref.filled).sum())
+
+    def test_batch_matches_sequential_stream(self):
+        """buffer_insert_batch == T chained buffer_insert calls (same math,
+        different schedule)."""
+        cfg = FCPOConfig(buffer_size=8)
+        cand = random_candidates(jax.random.PRNGKey(7), cfg, 40)
+        b_seq = insert_seq(buffer_insert, cfg, buffer_init(cfg), cand)
+        b_bat = jax.jit(lambda b: buffer_insert_batch(
+            cfg, b, cand["states"], cand["actions"], cand["logp"],
+            cand["rewards"], cand["values"], cand["probs"]))(buffer_init(cfg))
+        assert_buffers_match(b_bat, b_seq, score_tol=1e-5)
+        np.testing.assert_array_equal(np.asarray(b_bat.logp),
+                                      np.asarray(b_seq.logp))
+        np.testing.assert_array_equal(np.asarray(b_bat.rewards),
+                                      np.asarray(b_seq.rewards))
+        assert int(b_bat.count) == int(b_seq.count) == 40
+
+    def test_reference_built_buffer_feeds_streaming(self):
+        """buffer_insert_reference maintains the moments, so a reference-built
+        buffer is a valid streaming-engine input mid-sequence."""
+        cfg = FCPOConfig(buffer_size=8)
+        cand = random_candidates(jax.random.PRNGKey(3), cfg, 30)
+        half = {k: v[:15] for k, v in cand.items()}
+        rest = {k: v[15:] for k, v in cand.items()}
+        b_mixed = insert_seq(buffer_insert, cfg,
+                             insert_seq(buffer_insert_reference, cfg,
+                                        buffer_init(cfg), half), rest)
+        b_ref = insert_seq(buffer_insert_reference, cfg, buffer_init(cfg),
+                           cand)
+        assert_buffers_match(b_mixed, b_ref)
+
+
+class TestStreamingMoments:
+    def test_moments_match_recomputed_statistics(self):
+        """Property: after any insert/evict/clear history the running
+        sufficient statistics equal the statistics recomputed from the
+        stored slots, and the covariance they imply matches the
+        recompute-oracle covariance."""
+        cfg = FCPOConfig(buffer_size=6)
+        cand = random_candidates(jax.random.PRNGKey(11), cfg, 25)
+        buf = insert_seq(buffer_insert, cfg, buffer_init(cfg), cand)
+        buf = buffer_clear(buf)  # mid-history reset must zero the moments
+        assert int(buf.n_filled) == 0
+        assert float(jnp.abs(buf.s_outer).max()) == 0.0
+        cand2 = random_candidates(jax.random.PRNGKey(12), cfg, 25)
+        buf = insert_seq(buffer_insert, cfg, buf, cand2)
+
+        w = np.asarray(buf.filled, np.float32)
+        states = np.asarray(buf.states)
+        probs = np.asarray(buf.probs)
+        assert int(buf.n_filled) == int(w.sum())
+        np.testing.assert_allclose(np.asarray(buf.s_sum),
+                                   (states * w[:, None]).sum(0), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(buf.s_outer),
+            np.einsum("nd,ne,n->de", states, states, w), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(buf.p_sum),
+                                   (probs * w[:, None]).sum(0), atol=1e-5)
+
+        # implied covariance == oracle covariance
+        n = max(w.sum(), 1.0)
+        mu = np.asarray(buf.s_sum) / n
+        cov_stream = np.asarray(buf.s_outer) / n - np.outer(mu, mu)
+        diff = (states - mu) * w[:, None]
+        cov_oracle = diff.T @ diff / n
+        np.testing.assert_allclose(cov_stream, cov_oracle, atol=1e-3)
+
+    def test_resync_restores_exact_statistics_after_long_history(self):
+        """buffer_resync (called on the FL-round cadence by fl_round) snaps
+        the rank-1-updated moments back to the exact slot statistics, so
+        float32 add/subtract drift cannot accumulate across a training
+        run."""
+        cfg = FCPOConfig(buffer_size=4)
+        buf = buffer_init(cfg)
+        for chunk in range(8):  # 8 x 32 = 256 insert/evict cycles
+            cand = random_candidates(jax.random.PRNGKey(chunk), cfg, 32,
+                                     scale=5.0)
+            buf = insert_seq(buffer_insert, cfg, buf, cand)
+            buf = jax.jit(buffer_resync)(buf)
+            w = np.asarray(buf.filled, np.float32)
+            states = np.asarray(buf.states)
+            np.testing.assert_allclose(
+                np.asarray(buf.s_sum), (states * w[:, None]).sum(0),
+                rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(
+                np.asarray(buf.s_outer),
+                np.einsum("nd,ne,n->de", states, states, w),
+                rtol=1e-5, atol=1e-5)
+            assert int(buf.n_filled) == int(w.sum())
+
+    def test_score_from_moments_matches_mahalanobis_oracle(self):
+        cfg = FCPOConfig(buffer_size=8)
+        cand = random_candidates(jax.random.PRNGKey(5), cfg, 20)
+        buf = insert_seq(buffer_insert, cfg, buffer_init(cfg), cand)
+        probe = jnp.linspace(-2.0, 2.0, cfg.state_dim)
+        d_oracle = mahalanobis(probe, buf.states, buf.filled)
+        na = cfg.n_res + cfg.n_bs + cfg.n_mt
+        d_stream = kref.diversity_score_from_moments(
+            probe, jnp.full((na,), 1.0 / na), buf.s_sum, buf.s_outer,
+            buf.p_sum, buf.n_filled, alpha=1.0, beta=0.0)
+        np.testing.assert_allclose(float(d_stream), float(d_oracle), atol=1e-4)
+
+
+@pytest.mark.pallas
+class TestPallasKernel:
+    def test_kernel_matches_jnp_oracle(self):
+        """Fused diversity_insert kernel (interpret mode on CPU) ==
+        diversity_insert_ref, bit-for-bit over a batched fleet."""
+        from repro.kernels import ops as kops
+
+        cfg = FCPOConfig(buffer_size=8)
+        na = cfg.n_res + cfg.n_bs + cfg.n_mt
+        a, t = 4, 20
+        k1, k2 = jax.random.split(KEY)
+        cs = jax.random.normal(k1, (a, t, cfg.state_dim)) * 2.0
+        cp = jax.nn.softmax(jax.random.normal(k2, (a, t, na)), -1)
+        buf = buffer_init(cfg)
+        batched = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (a,) + x.shape),
+            (buf.states, buf.probs, buf.score, buf.filled, buf.s_sum,
+             buf.s_outer, buf.p_sum, buf.n_filled))
+
+        out_pal = kops.diversity_insert(*batched, cs, cp, alpha=cfg.alpha,
+                                        beta=cfg.beta)
+        out_ref = jax.vmap(lambda *xs: kref.diversity_insert_ref(
+            *xs, alpha=cfg.alpha, beta=cfg.beta))(*batched, cs, cp)
+        for name, pal, ref in zip(
+                ("states", "probs", "score", "filled", "s_sum", "s_outer",
+                 "p_sum", "n_filled", "slot", "do", "d"), out_pal, out_ref):
+            np.testing.assert_allclose(
+                finite(pal.astype(jnp.float32)),
+                finite(ref.astype(jnp.float32)), atol=1e-5, err_msg=name)
+
+    def test_batch_insert_use_pallas_end_to_end(self):
+        cfg = FCPOConfig(buffer_size=8)
+        cand = random_candidates(jax.random.PRNGKey(9), cfg, 16)
+        args = (cand["states"], cand["actions"], cand["logp"],
+                cand["rewards"], cand["values"], cand["probs"])
+        b_jnp = buffer_insert_batch(cfg, buffer_init(cfg), *args)
+        b_pal = buffer_insert_batch(cfg, buffer_init(cfg), *args,
+                                    use_pallas=True)
+        assert_buffers_match(b_pal, b_jnp, score_tol=1e-5)
+
+
+class TestEpisodeTrajectoryEquivalence:
+    def test_run_episode_matches_per_step_reference_inserts(self):
+        """The acceptance gate behind benchmarks/fig_buffer_perf.py: the
+        restructured episode loop (scan = env+policy, one batch insert)
+        produces the same trajectory AND the same buffer (slots evicted
+        identical, scores within 1e-4) as the seed loop with per-step
+        recompute-oracle inserts (``run_episode_reference`` — the same
+        definition the benchmark A/Bs)."""
+        cfg = FCPOConfig(buffer_size=16)
+        n_agents, t_steps = 4, 32
+        fleet = fleet_init(cfg, n_agents, KEY)
+        rates = fleet_traces(jax.random.PRNGKey(1), n_agents, t_steps)
+
+        ref_state, ref_roll, _ = jax.jit(jax.vmap(
+            lambda ep, st, r, m: run_episode_reference(cfg, ep, st, r, m)))(
+            fleet.env_params, fleet.astate, rates, fleet.masks)
+        new_state, rollout, _ = jax.jit(jax.vmap(
+            lambda ep, st, r, m: run_episode(cfg, ep, st, r, m)))(
+            fleet.env_params, fleet.astate, rates, fleet.masks)
+
+        np.testing.assert_array_equal(np.asarray(rollout.states),
+                                      np.asarray(ref_roll.states))
+        np.testing.assert_array_equal(np.asarray(rollout.rewards),
+                                      np.asarray(ref_roll.rewards))
+        assert_buffers_match(new_state.buffer, ref_state.buffer)
+        np.testing.assert_array_equal(np.asarray(new_state.rng),
+                                      np.asarray(ref_state.rng))

@@ -212,8 +212,9 @@ class TestFederated:
                                 fleet.head_groups, fleet.pod_ids, 1)
         w = params["head_bs"]["w"]
         expected = (fleet.base_params["head_bs"]["w"][0] + w.sum(0)) / (n + 1)
+        # atol floor: near-zero weights see float32 segment-sum reassociation
         np.testing.assert_allclose(np.asarray(newp["head_bs"]["w"][0]),
-                                   np.asarray(expected), rtol=1e-5)
+                                   np.asarray(expected), rtol=1e-5, atol=1e-8)
 
     def test_lower_loss_head_gets_more_weight(self):
         n = 2

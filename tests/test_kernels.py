@@ -10,6 +10,8 @@ from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.packing import pack
 
+pytestmark = pytest.mark.pallas
+
 KEY = jax.random.PRNGKey(0)
 
 
