@@ -10,7 +10,7 @@ import traceback
 from benchmarks import (fig7_end2end, fig7b_fl_latency, fig8_learning,
                         fig9_slo, fig10_warmstart, fig11_overhead,
                         fig12_ablation_heads, fig13_crl, fig14_frl_scaling,
-                        fig_buffer_perf, roofline)
+                        fig_buffer_perf, fig_sim_fidelity, roofline)
 from benchmarks.common import emit_csv
 
 BENCHES = [
@@ -24,6 +24,7 @@ BENCHES = [
     ("fig13_crl", fig13_crl.main),
     ("fig14_frl_scaling", fig14_frl_scaling.main),
     ("fig_buffer_perf", fig_buffer_perf.main),
+    ("fig_sim_fidelity", fig_sim_fidelity.main),
     ("roofline", roofline.main),
 ]
 

@@ -18,6 +18,7 @@ from repro.kernels import decode_attention as _dec
 from repro.kernels import diversity as _div
 from repro.kernels import flash_attention as _fa
 from repro.kernels import packing as _pack
+from repro.kernels import queue_advance as _qa
 
 
 def _interpret_default() -> bool:
@@ -55,3 +56,13 @@ def diversity_insert(states, probs, score, filled, s_sum, s_outer, p_sum,
                                  s_outer, p_sum, n_filled, cand_states,
                                  cand_probs, alpha=alpha, beta=beta,
                                  ridge=ridge, interpret=_interpret_default())
+
+
+@jax.jit
+def queue_advance(arrive, counters, credits, lat_sum, hist, arrivals, caps):
+    """Fused request-level data-plane advance (digital twin): admit ->
+    pre-process -> batch-form -> inference -> post-process -> deadline check,
+    K microticks per agent in one kernel call for the whole agent batch.
+    Oracle: ``repro.kernels.ref.queue_advance_ref``."""
+    return _qa.queue_advance(arrive, counters, credits, lat_sum, hist,
+                             arrivals, caps, interpret=_interpret_default())

@@ -1,0 +1,96 @@
+"""Pallas fused queue-advance kernel — the digital-twin data-plane hot path.
+
+One grid step per agent advances that agent's request-level pipeline state
+(admit -> pre-process -> batch-form -> inference service -> post-process ->
+deadline check) K microticks in a single kernel: the arrival ring, the stage
+counters, the service credits, and the latency histogram all stay in VMEM
+for the whole control interval, so the only HBM traffic is one load and one
+store of the agent's ~(R + H + 20)-word state per K ticks instead of K round
+trips. A fleet of A agents is one kernel call over grid (A,).
+
+The per-tick math is imported from ``repro.kernels.ref.sim_microtick`` — the
+same function the jnp oracle (``queue_advance_ref``) scans — so kernel and
+oracle agree bit-for-bit (equivalence-tested in tests/test_sim.py, including
+under ``vmap``). On this CPU container the kernel executes with
+``interpret=True`` (same body, XLA-CPU execution); on TPU the same call site
+compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as kref
+
+
+def _queue_kernel(arrive_ref, counters_ref, credits_ref, latsum_ref,
+                  hist_ref, arrivals_ref, caps_ref,
+                  o_arrive, o_counters, o_credits, o_latsum, o_hist,
+                  *, k_ticks):
+    caps = caps_ref[0]
+
+    def tick(t, carry):
+        n_arr = arrivals_ref[0, pl.ds(t, 1)][0]
+        return kref.sim_microtick(*carry, n_arr, caps)
+
+    init = (arrive_ref[0], counters_ref[0], credits_ref[0], latsum_ref[0],
+            hist_ref[0])
+    arrive, counters, credits, lat_sum, hist = jax.lax.fori_loop(
+        0, k_ticks, tick, init)
+    o_arrive[0] = arrive
+    o_counters[0] = counters
+    o_credits[0] = credits
+    o_latsum[0] = lat_sum
+    o_hist[0] = hist
+
+
+def queue_advance(arrive, counters, credits, lat_sum, hist, arrivals, caps,
+                  *, interpret=False):
+    """Fused K-microtick advance over the agent axis.
+
+    arrive: (A, R) int32 [or unbatched (R,) — a singleton agent axis is
+    added and squeezed]; counters: (A, SIM_NCOUNTERS) int32; credits: (A, 2)
+    float32; lat_sum: (A,) float32; hist: (A, H) int32; arrivals: (A, K)
+    int32; caps: (A, SIM_NCAPS) float32. Returns the updated state tuple
+    (arrive, counters, credits, lat_sum, hist), identical to
+    ``vmap(ref.queue_advance_ref)``."""
+    unbatched = arrive.ndim == 1
+    if unbatched:
+        (arrive, counters, credits, lat_sum, hist, arrivals, caps) = \
+            jax.tree.map(lambda x: x[None],
+                         (arrive, counters, credits, lat_sum, hist,
+                          arrivals, caps))
+    a, ring = arrive.shape
+    assert ring > 0 and ring & (ring - 1) == 0, \
+        "ring capacity must be a positive power of two"
+    k_ticks, hist_n = arrivals.shape[1], hist.shape[1]
+    f32, i32 = jnp.float32, jnp.int32
+
+    kernel = functools.partial(_queue_kernel, k_ticks=k_ticks)
+    spec = lambda *shape: pl.BlockSpec(
+        (1,) + shape, lambda a_: (a_,) + (0,) * len(shape))
+    out = pl.pallas_call(
+        kernel,
+        grid=(a,),
+        in_specs=[spec(ring), spec(kref.SIM_NCOUNTERS), spec(2), spec(),
+                  spec(hist_n), spec(k_ticks), spec(kref.SIM_NCAPS)],
+        out_specs=[spec(ring), spec(kref.SIM_NCOUNTERS), spec(2), spec(),
+                   spec(hist_n)],
+        out_shape=[
+            jax.ShapeDtypeStruct((a, ring), i32),
+            jax.ShapeDtypeStruct((a, kref.SIM_NCOUNTERS), i32),
+            jax.ShapeDtypeStruct((a, 2), f32),
+            jax.ShapeDtypeStruct((a,), f32),
+            jax.ShapeDtypeStruct((a, hist_n), i32),
+        ],
+        interpret=interpret,
+    )(arrive.astype(i32), counters.astype(i32), credits.astype(f32),
+      lat_sum.astype(f32), hist.astype(i32), arrivals.astype(i32),
+      caps.astype(f32))
+
+    if unbatched:
+        out = jax.tree.map(lambda x: x[0], out)
+    return tuple(out)

@@ -151,6 +151,153 @@ def diversity_insert_step(states, probs, score, filled, s_sum, s_outer,
         (idx, do, d)
 
 
+# ---------------------------------------------------------------------------
+# Request-level data-plane microtick (digital twin) — shared math + jnp oracle
+# ---------------------------------------------------------------------------
+# The twin keeps each agent's in-flight requests in a power-of-two ring whose
+# occupancy is described by MONOTONE int32 request counters rather than mod-R
+# pointers: because every request passes admit -> pre -> batch-form ->
+# inference -> post in order and every stage serves FIFO, each stage's
+# occupants are a CONTIGUOUS ring segment and the whole per-agent queue state
+# is five counters (head <= p_inf <= launch <= p_pre <= tail). Stage
+# membership is positional, a request's deadline is arrive + slo_ticks, and
+# ring slot ``i`` holds request number ``q`` iff q ≡ i (mod R) — so admission
+# and completion are mask writes/reads over ((i - ptr) & (R-1)) < n, never a
+# sort or a scatter. ``sim_microtick`` below is the single source of truth:
+# the jnp oracle (``queue_advance_ref``), the Pallas ``queue_advance`` kernel
+# body, and the harness all call it, so the implementations cannot drift.
+
+# counters vector layout (int32): five stage pointers (monotone request
+# counts), the inference-server occupancy flag + completion tick, four
+# request accumulators, and the global microtick counter.
+(SIM_TAIL, SIM_PPRE, SIM_LAUNCH, SIM_PINF, SIM_HEAD, SIM_BUSY, SIM_DONE_AT,
+ SIM_ARRIVED, SIM_DROPPED, SIM_COMPLETED, SIM_EFFECTIVE, SIM_TICK) = range(12)
+SIM_NCOUNTERS = 12
+
+# caps vector layout (float32; integer-valued entries cast inside the tick):
+# pre/post service capacity per tick, requests per inference batch, batch
+# service time in ticks, per-stage queue capacity, SLO deadline in ticks.
+CAP_PRE, CAP_POST, CAP_BATCH, CAP_TBATCH, CAP_QCAP, CAP_SLO = range(6)
+SIM_NCAPS = 6
+
+
+def _iota(n):
+    # 1D iota via broadcasted_iota — a plain 1D ``jax.lax.iota`` fails to
+    # lower inside a Pallas TPU kernel (vector lanes want >= 2D).
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
+
+
+def sim_microtick(arrive, counters, credits, lat_sum, hist, n_arrive, caps):
+    """One microtick of the request-level pipeline, pure array ops.
+
+    arrive: (R,) int32 ring of arrival ticks; counters: (SIM_NCOUNTERS,)
+    int32; credits: (2,) float32 fractional pre/post service tokens;
+    lat_sum: () float32; hist: (H,) int32 completed-latency histogram in
+    ticks; n_arrive: () int32 arrivals this tick; caps: (SIM_NCAPS,) float32.
+
+    Stage order is a backward sweep (complete -> post -> launch -> pre ->
+    admit) so a request spends >= 1 tick per stage; pre/post are token-bucket
+    servers (bucket depth = capacity + 1 so idle periods cannot bank
+    unbounded service); the inference server runs ONE batch at a time and
+    launches work-conserving (whatever is ready, up to the batch size and
+    the post-queue room — backpressure instead of post drops, which keeps
+    the ring segments contiguous); admission drops overflow beyond the
+    bounded pre queue. Deadline check: a completion at end-of-tick m has
+    latency m + 1 - arrive ticks and counts as effective iff it is within
+    slo_ticks. Python mirror: ``repro.sim.oracle`` (built on serving/slo.py).
+    """
+    ring = arrive.shape[0]
+    assert ring > 0 and ring & (ring - 1) == 0, \
+        "ring capacity must be a positive power of two"
+    hist_n = hist.shape[0]
+    idx = _iota(ring)
+    c = counters
+    m = c[SIM_TICK]
+
+    c_pre, c_post = caps[CAP_PRE], caps[CAP_POST]
+    batch_slots = caps[CAP_BATCH].astype(jnp.int32)
+    t_batch = caps[CAP_TBATCH].astype(jnp.int32)
+    qcap = caps[CAP_QCAP].astype(jnp.int32)
+    slo_ticks = caps[CAP_SLO].astype(jnp.int32)
+
+    # (1) inference completion: the in-flight batch lands in the post queue.
+    done = (c[SIM_BUSY] > 0) & (m >= c[SIM_DONE_AT])
+    p_inf = jnp.where(done, c[SIM_LAUNCH], c[SIM_PINF])
+    busy = jnp.where(done, 0, c[SIM_BUSY])
+
+    # (2) post-processing serves the n oldest post-queue requests; their
+    # latencies feed the accumulators and the histogram.
+    # (credits stay >= 0, so the int32 cast truncates == floor)
+    post_credit = jnp.minimum(credits[1] + c_post, c_post + 1.0)
+    n_post = jnp.minimum(post_credit.astype(jnp.int32),
+                         p_inf - c[SIM_HEAD])
+    post_credit = post_credit - n_post.astype(jnp.float32)
+    comp = ((idx - c[SIM_HEAD]) & (ring - 1)) < n_post
+    lat = m + 1 - arrive
+    lat_sum = lat_sum + jnp.sum(jnp.where(comp, lat, 0)).astype(jnp.float32)
+    n_eff = jnp.sum(comp & (lat <= slo_ticks), dtype=jnp.int32)
+    # non-completed slots bucket to the out-of-range sentinel hist_n
+    bucket = jnp.where(comp, jnp.clip(lat, 0, hist_n - 1), hist_n)
+    hist = hist + jnp.sum(bucket[:, None] == _iota(hist_n)[None, :],
+                          axis=0, dtype=jnp.int32)
+    head = c[SIM_HEAD] + n_post
+
+    # (3) batch launch: work-conserving, backpressured by post-queue room
+    # (room counts everything at/after inference not yet post-completed, so
+    # the post queue can never exceed qcap and never needs to drop).
+    ready = c[SIM_PPRE] - c[SIM_LAUNCH]
+    room = qcap - (c[SIM_LAUNCH] - head)
+    n_launch = jnp.maximum(
+        jnp.minimum(jnp.minimum(ready, batch_slots), room), 0)
+    do_launch = (busy == 0) & (n_launch > 0)
+    launch = jnp.where(do_launch, c[SIM_LAUNCH] + n_launch, c[SIM_LAUNCH])
+    done_at = jnp.where(do_launch, m + t_batch, c[SIM_DONE_AT])
+    busy = jnp.where(do_launch, 1, busy)
+
+    # (4) pre-processing, backpressured by batch-formation queue room.
+    pre_credit = jnp.minimum(credits[0] + c_pre, c_pre + 1.0)
+    n_pre = jnp.minimum(
+        pre_credit.astype(jnp.int32),
+        jnp.minimum(c[SIM_TAIL] - c[SIM_PPRE],
+                    jnp.maximum(qcap - (c[SIM_PPRE] - launch), 0)))
+    n_pre = jnp.maximum(n_pre, 0)
+    pre_credit = pre_credit - n_pre.astype(jnp.float32)
+    p_pre = c[SIM_PPRE] + n_pre
+
+    # (5) admission into the bounded pre queue; overflow drops. Each stage
+    # queue is <= qcap, so with ring >= 3*qcap the ring bound never binds.
+    free = jnp.minimum(qcap - (c[SIM_TAIL] - p_pre),
+                       ring - (c[SIM_TAIL] - head))
+    admit = jnp.clip(jnp.minimum(n_arrive, free), 0, n_arrive)
+    adm = ((idx - c[SIM_TAIL]) & (ring - 1)) < admit
+    arrive = jnp.where(adm, m, arrive)
+    tail = c[SIM_TAIL] + admit
+
+    counters = jnp.stack([
+        tail, p_pre, launch, p_inf, head, busy, done_at,
+        c[SIM_ARRIVED] + n_arrive, c[SIM_DROPPED] + (n_arrive - admit),
+        c[SIM_COMPLETED] + n_post, c[SIM_EFFECTIVE] + n_eff, m + 1])
+    credits = jnp.stack([pre_credit, post_credit])
+    return arrive, counters, credits, lat_sum, hist
+
+
+def queue_advance_ref(arrive, counters, credits, lat_sum, hist, arrivals,
+                      caps):
+    """jnp oracle for the fused Pallas ``queue_advance`` kernel: advance ONE
+    agent's data plane K microticks (vmap for a fleet).
+
+    arrivals: (K,) int32 per-tick arrival counts; caps: (SIM_NCAPS,) float32
+    (one action decode, held for the whole control interval). Returns the
+    updated (arrive, counters, credits, lat_sum, hist)."""
+
+    def tick(carry, n_arr):
+        return sim_microtick(*carry, n_arr, caps), None
+
+    carry, _ = jax.lax.scan(
+        tick, (arrive, counters, credits, lat_sum, hist), arrivals)
+    return carry
+
+
 def diversity_insert_ref(states, probs, score, filled, s_sum, s_outer, p_sum,
                          n_filled, cand_states, cand_probs, *, alpha, beta,
                          ridge=0.1):

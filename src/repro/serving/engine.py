@@ -73,7 +73,12 @@ def _bucket(n: int, buckets) -> int:
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    # Falling through to buckets[-1] would make the pad amount negative and
+    # crash deep inside jnp.pad with an opaque error; fail loudly instead.
+    raise ValueError(
+        f"size {n} exceeds the largest compiled bucket {buckets[-1]} "
+        f"(buckets={tuple(buckets)}); extend the bucket set or split the "
+        f"request into bucket-sized chunks")
 
 
 class ServingEngine:

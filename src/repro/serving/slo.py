@@ -4,6 +4,12 @@ Mirrors the paper's metrics: *throughput* (results/s), *effective throughput*
 (results that met their end-to-end SLO), queue drops from bounded queues, and
 per-request end-to-end latency. Used by the real-engine examples; the
 pure-JAX MDP in ``core/env.py`` models the same quantities tensorially.
+
+These classes are also the REFERENCE data plane for the tensorized
+request-level twin (``repro.sim``): ``repro.sim.oracle`` drives them
+tick-for-tick against ``kernels.ref.sim_microtick`` and the two must agree
+request-for-request (tests/test_sim.py; benchmarks/fig_sim_fidelity.py
+times the same pair).
 """
 from __future__ import annotations
 

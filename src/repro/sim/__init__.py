@@ -1,0 +1,15 @@
+"""Request-level data-plane simulator (digital twin) — see
+docs/architecture.md, "Request-level simulator"."""
+from repro.sim.harness import sim_observe, simulate_fleet
+from repro.sim.metrics import hist_percentile, summarize
+from repro.sim.scenarios import SCENARIOS, make_scenario
+from repro.sim.state import (SimParams, SimState, action_caps,
+                             effective_queue_cap, sim_init, spread_arrivals)
+from repro.sim.step import sim_interval, sim_interval_ref
+
+__all__ = [
+    "SCENARIOS", "SimParams", "SimState", "action_caps",
+    "effective_queue_cap", "hist_percentile", "make_scenario",
+    "sim_init", "sim_interval", "sim_interval_ref", "sim_observe",
+    "simulate_fleet", "spread_arrivals", "summarize",
+]

@@ -1,0 +1,113 @@
+"""Closed-loop twin harness: trained FCPO policies driving the request-level
+data plane.
+
+``simulate_fleet`` runs a whole fleet evaluation as ONE jitted program:
+a ``lax.scan`` over control intervals where each interval observes the twin
+state, samples the iAgent actions (policy applied every k_ticks microticks,
+exactly the paper's 1 s control cadence), decodes them to service caps, and
+advances K microticks through ``sim_interval`` (vmapped jnp oracle or the
+fused Pallas kernel). There is zero host-side Python per microtick — the
+host dispatches once and fetches the per-interval history once.
+"""
+from __future__ import annotations
+
+import warnings
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.agent import ActionMask, sample_actions
+from repro.core.env import EnvParams
+from repro.sim import metrics as sim_metrics
+from repro.sim.state import (SimParams, SimState, action_caps,
+                             effective_queue_cap, sim_init, spread_arrivals)
+from repro.sim.step import sim_interval
+
+
+def sim_observe(cfg: FCPOConfig, sp: SimParams, ep: EnvParams,
+                state: SimState, drops_prev, cur_action, rate):
+    """The 8-dim iAgent state vector (§IV-B) read off the twin instead of
+    the fluid MDP: same normalizations as ``core.env.observe`` so a policy
+    trained on the fluid env transfers without retargeting."""
+    qcap = effective_queue_cap(sp, ep)
+    return jnp.stack([
+        rate / 100.0,
+        cur_action[0].astype(jnp.float32) / max(cfg.n_res - 1, 1),
+        cur_action[1].astype(jnp.float32) / max(cfg.n_bs - 1, 1),
+        cur_action[2].astype(jnp.float32) / max(cfg.n_mt - 1, 1),
+        drops_prev.astype(jnp.float32) / 50.0,
+        state.pre_q.astype(jnp.float32) / qcap,
+        state.post_q.astype(jnp.float32) / qcap,
+        ep.slo_s / 0.5,
+    ])
+
+
+@partial(jax.jit, static_argnums=(0, 1), static_argnames=("use_pallas",))
+def _simulate(cfg: FCPOConfig, sp: SimParams, params, masks: ActionMask,
+              env_params: EnvParams, traces, key, use_pallas: bool = False):
+    a = traces.shape[0]
+    state0 = jax.vmap(lambda _: sim_init(sp))(jnp.arange(a))
+
+    def interval(carry, rate):
+        state, drops_prev, cur_action, phase, rng = carry
+        rng, k = jax.random.split(rng)
+        obs = jax.vmap(
+            lambda e, s, d, ca, r: sim_observe(cfg, sp, e, s, d, ca, r)
+        )(env_params, state, drops_prev, cur_action, rate)
+        actions, _, _ = jax.vmap(
+            lambda p, o, m, kk: sample_actions(cfg, p, o, m, kk)
+        )(params, obs, masks, jax.random.split(k, a))
+        caps = jax.vmap(
+            lambda e, ac: action_caps(cfg, sp, e, ac))(env_params, actions)
+        arrivals, phase = jax.vmap(
+            lambda r, ph: spread_arrivals(sp, r, ph))(rate, phase)
+        state2 = sim_interval(state, arrivals, caps, use_pallas)
+
+        d_comp = (state2.completed - state.completed).astype(jnp.float32)
+        d_drop = state2.dropped - state.dropped
+        ys = {
+            "throughput": d_comp / sp.interval_s,
+            "effective_throughput":
+                (state2.effective - state.effective).astype(jnp.float32)
+                / sp.interval_s,
+            "drops": d_drop.astype(jnp.float32),
+            "latency": (state2.lat_sum - state.lat_sum)
+                / jnp.maximum(d_comp, 1.0) * sp.dt,
+            "pre_q": state2.pre_q.astype(jnp.float32),
+            "post_q": state2.post_q.astype(jnp.float32),
+        }
+        return (state2, d_drop, actions, phase, rng), ys
+
+    init = (state0, jnp.zeros((a,), jnp.int32),
+            jnp.zeros((a, 3), jnp.int32), jnp.zeros((a,), jnp.float32), key)
+    (state, *_), history = jax.lax.scan(interval, init, traces.T)
+    return state, history
+
+
+def simulate_fleet(cfg: FCPOConfig, sp: SimParams, params,
+                   masks: ActionMask, env_params: EnvParams, traces, key,
+                   use_pallas: bool = False
+                   ) -> Tuple[SimState, Dict, Dict]:
+    """Drive a fleet of trained policies through the request-level twin.
+
+    params/masks/env_params: agent-stacked (A, ...) pytrees (e.g. a trained
+    ``Fleet``'s ``astate.params`` / ``masks`` / ``env_params``); traces:
+    (A, T) control-interval arrival rates (requests/s). Returns
+    (final SimState (A, ...), per-interval history dict of (T, A) arrays,
+    per-agent request-grade summary incl. p50/p99 latency)."""
+    qcap = np.asarray(jax.device_get(env_params.queue_cap))
+    if (qcap > sp.ring // 3).any():
+        warnings.warn(
+            f"SimParams.ring={sp.ring} clamps queue_cap "
+            f"{float(qcap.max()):.0f} -> {sp.ring // 3} (ring must be >= "
+            f"3*queue_cap); twin dynamics and observation normalization "
+            f"will differ from the fluid env — raise `ring` to match the "
+            f"device profile", stacklevel=2)
+    state, history = _simulate(cfg, sp, params, masks, env_params,
+                               jnp.asarray(traces, jnp.float32), key,
+                               use_pallas=use_pallas)
+    return state, history, sim_metrics.summarize(state, sp)

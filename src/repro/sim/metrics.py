@@ -1,0 +1,53 @@
+"""Request-grade metrics from twin state: throughput, effective throughput,
+drops, and latency percentiles from the on-device histogram."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sim.state import SimParams, SimState
+
+
+def hist_percentile(hist: jnp.ndarray, q: float) -> jnp.ndarray:
+    """q-quantile (in ticks) of a completed-latency histogram (..., H):
+    the first bucket where the cumulative count reaches ceil(q * total).
+    Empty histograms return 0. The histogram is right-censored at H-1
+    ticks, so the result is a lower bound whenever the top bucket is
+    populated (see ``summarize``'s ``hist_censored``)."""
+    total = jnp.sum(hist, axis=-1, keepdims=True)
+    cum = jnp.cumsum(hist, axis=-1)
+    target = jnp.maximum(jnp.ceil(q * total), 1)
+    idx = jnp.argmax(cum >= target, axis=-1)
+    return jnp.where(total[..., 0] > 0, idx, 0)
+
+
+def summarize(state: SimState, sp: SimParams) -> dict:
+    """Per-agent request-grade summary (works batched): rates are per
+    second over the simulated horizon; latencies in seconds.
+
+    The histogram is right-censored: latencies beyond (hist_n-1) ticks all
+    land in the top bucket, so the percentiles are capped at
+    (hist_n-1) * dt. ``hist_censored`` reports the fraction of completions
+    in that bucket — if it is non-negligible, re-run with a larger
+    ``SimParams.hist_n`` before trusting p99 (``mean_latency_s`` comes from
+    the unclipped latency sum and is never censored)."""
+    secs = jnp.maximum(state.tick.astype(jnp.float32) * sp.dt, 1e-9)
+    completed = state.completed.astype(jnp.float32)
+    return {
+        "hist_censored": (state.hist[..., -1].astype(jnp.float32)
+                          / jnp.maximum(completed, 1.0)),
+        "throughput": completed / secs,
+        "effective_throughput": state.effective.astype(jnp.float32) / secs,
+        "drop_rate": (state.dropped.astype(jnp.float32)
+                      / jnp.maximum(state.arrived.astype(jnp.float32), 1.0)),
+        "mean_latency_s": (state.lat_sum / jnp.maximum(completed, 1.0)
+                           * sp.dt),
+        "p50_latency_s": hist_percentile(state.hist, 0.50)
+        .astype(jnp.float32) * sp.dt,
+        "p99_latency_s": hist_percentile(state.hist, 0.99)
+        .astype(jnp.float32) * sp.dt,
+        "arrived": state.arrived,
+        "completed": state.completed,
+        "dropped": state.dropped,
+        "effective": state.effective,
+        "in_flight": state.in_flight,
+    }

@@ -1,0 +1,27 @@
+"""Canned twin evaluation scenarios over the workload-trace generators."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.data import workload
+
+
+def make_scenario(name: str, key, n_agents: int, n_intervals: int
+                  ) -> jnp.ndarray:
+    """(A, T) control-interval arrival-rate traces for a named scenario."""
+    if name == "steady":
+        return workload.fleet_traces(key, n_agents, n_intervals,
+                                     **workload.PROFILING)
+    if name == "dynamic":
+        return workload.fleet_traces(key, n_agents, n_intervals,
+                                     **workload.DYNAMIC)
+    if name == "switching":
+        return workload.switching_traces(key, n_agents, n_intervals,
+                                         segment=max(n_intervals // 5, 1))
+    if name == "ood":
+        return workload.ood_traces(key, n_agents, n_intervals)
+    raise ValueError(f"unknown scenario {name!r}; "
+                     f"choose from {sorted(SCENARIOS)}")
+
+
+SCENARIOS = ("steady", "dynamic", "switching", "ood")

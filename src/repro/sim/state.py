@@ -1,0 +1,155 @@
+"""State layout + action decode for the request-level data-plane twin.
+
+A ``SimState`` is ONE agent's discrete-event pipeline (stack the leaves to
+(A, ...) for a fleet): a power-of-two ring of arrival microticks plus the
+monotone stage counters, token-bucket service credits, and request-grade
+accumulators defined in ``repro.kernels.ref`` (the shared microtick math).
+Stage membership is positional — each pipeline stage's occupants are a
+contiguous ring segment between two counters — so queue lengths are counter
+differences, a request's deadline is ``arrive + slo_ticks``, and sizes are
+uniformly one object per request (the accumulators are the hook if
+objects-per-frame weighting is ever needed).
+
+``action_caps`` decodes an iAgent action (RES, BS, MT) into the per-tick
+service capacities of the twin with the SAME formulas as the fluid
+``core/env.py`` MDP (contention, frame packing, the t0 + t1·bs·area batch
+curve), which is what makes fluid-vs-twin fidelity checks meaningful.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.env import EnvParams
+from repro.kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class SimParams:
+    """Static twin geometry (hashable — a jit static argument)."""
+    dt: float = 0.05     # microtick length (s); k_ticks*dt = control interval
+    k_ticks: int = 20    # microticks per control interval (1 s in the paper)
+    ring: int = 512      # ring capacity; power of two, >= 3 * queue_cap
+    hist_n: int = 64     # latency histogram buckets (ticks)
+
+    def __post_init__(self):
+        assert self.ring > 0 and self.ring & (self.ring - 1) == 0, \
+            "ring capacity must be a positive power of two"
+        assert self.k_ticks >= 1 and self.hist_n >= 2
+
+    @property
+    def interval_s(self) -> float:
+        return self.k_ticks * self.dt
+
+
+class SimState(NamedTuple):
+    """Per-agent twin state; all views below work batched (A, ...)."""
+    arrive: jnp.ndarray    # (R,) int32 — arrival microtick per ring slot
+    counters: jnp.ndarray  # (SIM_NCOUNTERS,) int32 — pointers + accumulators
+    credits: jnp.ndarray   # (2,) float32 — pre/post fractional service credit
+    lat_sum: jnp.ndarray   # () float32 — summed completed latency (ticks)
+    hist: jnp.ndarray      # (H,) int32 — completed-latency histogram (ticks)
+
+    # queue lengths are differences of the monotone stage counters
+    @property
+    def pre_q(self):
+        return (self.counters[..., kref.SIM_TAIL]
+                - self.counters[..., kref.SIM_PPRE])
+
+    @property
+    def batch_q(self):
+        return (self.counters[..., kref.SIM_PPRE]
+                - self.counters[..., kref.SIM_LAUNCH])
+
+    @property
+    def post_q(self):
+        return (self.counters[..., kref.SIM_PINF]
+                - self.counters[..., kref.SIM_HEAD])
+
+    @property
+    def in_flight(self):
+        return (self.counters[..., kref.SIM_TAIL]
+                - self.counters[..., kref.SIM_HEAD])
+
+    @property
+    def arrived(self):
+        return self.counters[..., kref.SIM_ARRIVED]
+
+    @property
+    def dropped(self):
+        return self.counters[..., kref.SIM_DROPPED]
+
+    @property
+    def completed(self):
+        return self.counters[..., kref.SIM_COMPLETED]
+
+    @property
+    def effective(self):
+        return self.counters[..., kref.SIM_EFFECTIVE]
+
+    @property
+    def tick(self):
+        return self.counters[..., kref.SIM_TICK]
+
+
+def sim_init(sp: SimParams) -> SimState:
+    """One agent's empty pipeline (vmap over a dummy axis for a fleet)."""
+    return SimState(
+        arrive=jnp.zeros((sp.ring,), jnp.int32),
+        counters=jnp.zeros((kref.SIM_NCOUNTERS,), jnp.int32),
+        credits=jnp.zeros((2,), jnp.float32),
+        lat_sum=jnp.zeros((), jnp.float32),
+        hist=jnp.zeros((sp.hist_n,), jnp.int32),
+    )
+
+
+def effective_queue_cap(sp: SimParams, ep: EnvParams) -> jnp.ndarray:
+    """Per-stage queue capacity, clamped so the ring can never overflow
+    (each of the three stage queues is bounded by it)."""
+    return jnp.minimum(ep.queue_cap, float(sp.ring // 3))
+
+
+def action_caps(cfg: FCPOConfig, sp: SimParams, ep: EnvParams,
+                action: jnp.ndarray) -> jnp.ndarray:
+    """Decode one agent's (RES, BS, MT) action into a (SIM_NCAPS,) float32
+    caps vector for the microtick kernel — same latency surface as
+    ``core.env.env_step`` (mt contention, 1/area frame packing,
+    t_batch = t0 + t1·bs·area), discretized to ticks."""
+    res_scale = jnp.asarray(cfg.res_scales)[action[..., 0]]
+    bs = jnp.asarray(cfg.bs_values, jnp.float32)[action[..., 1]]
+    mt = jnp.asarray(cfg.mt_values, jnp.float32)[action[..., 2]]
+
+    area = res_scale ** 2
+    mt_eff = mt * jnp.maximum(1.0 - ep.contention * (mt - 1.0), 0.3)
+    rate_pre = ep.pre_rate * mt_eff / jnp.maximum(area, 0.05)
+    rate_post = ep.post_rate * mt_eff
+    t_batch_s = ep.t0 + ep.t1 * bs * area
+
+    return jnp.stack([
+        rate_pre * sp.dt,
+        rate_post * sp.dt,
+        jnp.maximum(jnp.round(bs / area), 1.0),      # requests per batch
+        jnp.maximum(jnp.ceil(t_batch_s / sp.dt), 1.0),
+        jnp.round(effective_queue_cap(sp, ep)),
+        jnp.maximum(jnp.round(ep.slo_s / sp.dt), 1.0),
+    ]).astype(jnp.float32)
+
+
+def spread_arrivals(sp: SimParams, rate, phase=0.0):
+    """Deterministic per-tick arrival counts for one control interval.
+
+    Cumulative-floor spreading of ``rate`` requests/s over k_ticks, with
+    ``phase`` carrying the fractional request left over from previous
+    intervals — so a steady 30.9 req/s admits 30.9 requests/s on average
+    instead of a permanent floor(rate) deficit. Returns ((K,) int32 counts,
+    new phase in [0, 1)); the interval total is
+    floor(phase + rate * k_ticks * dt)."""
+    phase = jnp.asarray(phase, jnp.float32)
+    j = jnp.arange(1 + sp.k_ticks, dtype=jnp.float32)
+    cum = jnp.floor(phase + rate * sp.dt * j)
+    counts = (cum[1:] - cum[:-1]).astype(jnp.int32)
+    end = phase + rate * sp.dt * sp.k_ticks
+    return counts, end - jnp.floor(end)

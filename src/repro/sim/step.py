@@ -1,0 +1,33 @@
+"""Interval advance: the twin's data plane for one K-microtick interval.
+
+``sim_interval_ref`` is the single-agent jnp oracle (a ``lax.scan`` over the
+shared ``kernels.ref.sim_microtick``); ``sim_interval`` is the fleet-batched
+entry point that either vmaps the oracle or routes the whole agent batch
+through the fused Pallas ``queue_advance`` kernel — bit-identical paths
+(tests/test_sim.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.sim.state import SimState
+
+
+def sim_interval_ref(state: SimState, arrivals: jnp.ndarray,
+                     caps: jnp.ndarray) -> SimState:
+    """Advance ONE agent k_ticks microticks. arrivals: (K,) int32; caps:
+    (SIM_NCAPS,) float32 (one action decode held for the interval)."""
+    return SimState(*kref.queue_advance_ref(*state, arrivals, caps))
+
+
+def sim_interval(state: SimState, arrivals: jnp.ndarray, caps: jnp.ndarray,
+                 use_pallas: bool = False) -> SimState:
+    """Fleet-batched advance: state leaves (A, ...), arrivals (A, K), caps
+    (A, SIM_NCAPS). ``use_pallas`` fuses the whole interval per agent into
+    one kernel call for the batch."""
+    if use_pallas:
+        return SimState(*kops.queue_advance(*state, arrivals, caps))
+    return jax.vmap(sim_interval_ref)(state, arrivals, caps)

@@ -55,6 +55,40 @@ def test_buffer_count_tracks_attempts(seed):
 
 
 # ---------------------------------------------------------------------------
+# Request-level twin invariants (repro.sim)
+# ---------------------------------------------------------------------------
+from repro.sim import SimParams, sim_init  # noqa: E402
+
+SIM_SP = SimParams(dt=0.05, k_ticks=1, ring=32, hist_n=16)
+_sim_tick = jax.jit(lambda s, n, caps: ref.sim_microtick(*s, n, caps))
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(0, 10), min_size=1, max_size=40),
+       st.sampled_from([0.5, 1.0, 1.5, 2.5]),
+       st.sampled_from([1.0, 2.0, 4.0]),
+       st.integers(1, 8), st.integers(1, 3))
+def test_sim_microtick_conservation(arrivals, c_pre, c_post, batch, t_batch):
+    """At EVERY microtick: arrivals == completed + dropped + in-flight, the
+    stage pointers stay ordered and within ring capacity (so no request can
+    complete after its slot is recycled), and no completion is recorded
+    with a sub-tick latency (histogram bucket 0 stays empty)."""
+    caps = jnp.asarray([c_pre, c_post, batch, t_batch, 8.0, 4.0], jnp.float32)
+    state = tuple(sim_init(SIM_SP))
+    for n in arrivals:
+        state = _sim_tick(state, jnp.asarray(n, jnp.int32), caps)
+        c = np.asarray(state[1])
+        in_flight = c[ref.SIM_TAIL] - c[ref.SIM_HEAD]
+        assert c[ref.SIM_ARRIVED] == (c[ref.SIM_DROPPED]
+                                      + c[ref.SIM_COMPLETED] + in_flight)
+        assert (c[ref.SIM_HEAD] <= c[ref.SIM_PINF] <= c[ref.SIM_LAUNCH]
+                <= c[ref.SIM_PPRE] <= c[ref.SIM_TAIL])
+        assert 0 <= in_flight <= SIM_SP.ring
+        assert c[ref.SIM_EFFECTIVE] <= c[ref.SIM_COMPLETED]
+    assert int(np.asarray(state[4])[0]) == 0  # no zero-tick completions
+
+
+# ---------------------------------------------------------------------------
 # Aggregation invariants
 # ---------------------------------------------------------------------------
 def _mini_fleet(n, seed=0):

@@ -1,0 +1,197 @@
+"""Request-level twin: Pallas kernel vs jnp oracle bit-identity, twin vs the
+Python slo.py data plane (request-for-request), and the closed-loop
+``simulate_fleet`` harness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.fleet import fleet_init
+from repro.data.workload import fleet_traces
+from repro.kernels import ref as kref
+from repro.kernels.queue_advance import queue_advance
+from repro.sim import (SimParams, SimState, action_caps, hist_percentile,
+                       sim_init, sim_interval, sim_interval_ref,
+                       simulate_fleet, spread_arrivals)
+from repro.sim.oracle import simulate_python_agent
+
+KEY = jax.random.PRNGKey(0)
+SP = SimParams(dt=0.05, k_ticks=8, ring=32, hist_n=16)
+CAPS = jnp.asarray([2.5, 3.0, 4.0, 2.0, 8.0, 5.0], jnp.float32)
+
+
+def _batched_state(a):
+    return jax.vmap(lambda _: sim_init(SP))(jnp.arange(a))
+
+
+def _random_args(a, key):
+    k1, k2 = jax.random.split(key)
+    arrivals = jax.random.randint(k1, (a, SP.k_ticks), 0, 7)
+    jitter = jax.random.randint(k2, (a, 6), 0, 3).astype(jnp.float32)
+    caps = CAPS[None] + jitter * jnp.asarray([0.5, 0.5, 1.0, 1.0, 0.0, 0.0])
+    return arrivals, caps
+
+
+class TestQueueAdvanceKernel:
+    pytestmark = pytest.mark.pallas
+
+    def test_kernel_matches_oracle_batched_bit_identical(self):
+        """Fused kernel (interpret mode on CPU) == vmap'd jnp oracle,
+        bit-for-bit, chained over several control intervals."""
+        a = 4
+        state = _batched_state(a)
+        for i in range(5):
+            arrivals, caps = _random_args(a, jax.random.fold_in(KEY, i))
+            out_pal = queue_advance(*state, arrivals, caps, interpret=True)
+            out_ref = jax.vmap(kref.queue_advance_ref)(*state, arrivals, caps)
+            for name, p, r in zip(SimState._fields, out_pal, out_ref):
+                np.testing.assert_array_equal(np.asarray(p), np.asarray(r),
+                                              err_msg=f"{name} @ interval {i}")
+            state = SimState(*out_pal)
+        assert int(state.completed.sum()) > 0  # the chain did real work
+
+    def test_kernel_bit_identical_under_vmap(self):
+        """vmap of the single-agent kernel call == the batched grid call ==
+        vmap of the oracle."""
+        a = 3
+        state = _batched_state(a)
+        arrivals, caps = _random_args(a, KEY)
+        out_batch = queue_advance(*state, arrivals, caps, interpret=True)
+        out_vmap = jax.vmap(
+            lambda *xs: queue_advance(*xs, interpret=True))(*state, arrivals,
+                                                            caps)
+        out_ref = jax.vmap(kref.queue_advance_ref)(*state, arrivals, caps)
+        for name, b, v, r in zip(SimState._fields, out_batch, out_vmap,
+                                 out_ref):
+            np.testing.assert_array_equal(np.asarray(b), np.asarray(v),
+                                          err_msg=name)
+            np.testing.assert_array_equal(np.asarray(b), np.asarray(r),
+                                          err_msg=name)
+
+
+class TestPythonOracleEquivalence:
+    def test_twin_matches_slo_reference_request_for_request(self):
+        """Tensorized twin == serving/slo.py data plane on a single-agent
+        config: same completions, drops, effective throughput, and summed
+        latency (integer-representable caps => exact)."""
+        t_ints = 12
+        arrivals = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(3), (t_ints, SP.k_ticks),
+                               0, 7))
+        rng = np.random.default_rng(0)
+        caps = np.stack([
+            rng.choice([1.5, 2.0, 2.5, 3.0], t_ints),
+            rng.choice([2.0, 3.0, 4.0], t_ints),
+            rng.choice([2.0, 4.0, 8.0], t_ints),
+            rng.choice([1.0, 2.0, 3.0], t_ints),
+            np.full(t_ints, 8.0),
+            np.full(t_ints, 5.0),
+        ], axis=1).astype(np.float32)
+
+        s = sim_init(SP)
+        for t in range(t_ints):
+            s = sim_interval_ref(s, jnp.asarray(arrivals[t]),
+                                 jnp.asarray(caps[t]))
+        py = simulate_python_agent(arrivals, caps, SP)
+
+        assert int(s.arrived) == py["arrived"]
+        assert int(s.dropped) == py["dropped"]
+        assert int(s.completed) == py["completed"]
+        assert int(s.effective) == py["effective"]
+        assert float(s.lat_sum) == py["lat_sum"]
+        assert int(s.in_flight) == py["in_flight"]
+        assert py["dropped"] > 0 and py["completed"] > 0  # both regimes hit
+
+
+class TestHarness:
+    def _fleet(self, a):
+        cfg = FCPOConfig()
+        fleet = fleet_init(cfg, a, KEY)
+        traces = fleet_traces(jax.random.PRNGKey(1), a, 6)
+        return cfg, fleet, traces
+
+    def test_simulate_fleet_runs_jitted_and_conserves(self):
+        cfg, fleet, traces = self._fleet(3)
+        state, hist, summ = simulate_fleet(
+            cfg, SP, fleet.astate.params, fleet.masks, fleet.env_params,
+            traces, jax.random.PRNGKey(2))
+        assert hist["throughput"].shape == (6, 3)
+        conserved = (state.arrived
+                     == state.dropped + state.completed + state.in_flight)
+        assert bool(conserved.all())
+        for k in ("throughput", "effective_throughput", "p50_latency_s",
+                  "p99_latency_s", "drop_rate"):
+            assert np.isfinite(np.asarray(summ[k])).all(), k
+        assert (np.asarray(summ["effective"])
+                <= np.asarray(summ["completed"])).all()
+
+    @pytest.mark.pallas
+    def test_pallas_harness_matches_jnp_harness(self):
+        """Same key, same traces: the kernel-backed closed loop must be
+        bit-identical to the jnp one (actions depend on twin state, so any
+        data-plane divergence compounds — exact equality is the gate)."""
+        cfg, fleet, traces = self._fleet(2)
+        out_j = simulate_fleet(cfg, SP, fleet.astate.params, fleet.masks,
+                               fleet.env_params, traces,
+                               jax.random.PRNGKey(2))
+        out_p = simulate_fleet(cfg, SP, fleet.astate.params, fleet.masks,
+                               fleet.env_params, traces,
+                               jax.random.PRNGKey(2), use_pallas=True)
+        for name, j, p in zip(SimState._fields, out_j[0], out_p[0]):
+            np.testing.assert_array_equal(np.asarray(j), np.asarray(p),
+                                          err_msg=name)
+
+
+class TestStateAndMetrics:
+    def test_spread_arrivals_totals_and_bounds(self):
+        for rate in (0.0, 1.0, 17.3, 399.9):
+            arr, phase = spread_arrivals(SP, jnp.float32(rate))
+            arr = np.asarray(arr)
+            assert arr.shape == (SP.k_ticks,) and (arr >= 0).all()
+            assert arr.sum() == int(np.floor(np.float32(rate) * SP.k_ticks
+                                             * np.float32(SP.dt)))
+            assert 0.0 <= float(phase) < 1.0
+
+    def test_spread_arrivals_phase_carry_removes_rounding_bias(self):
+        """Chaining intervals with the phase carry admits the fractional
+        request rate on average (floor-per-interval would lose it)."""
+        rate = jnp.float32(30.9)  # 12.36 requests per 8-tick interval
+        total, phase = 0, jnp.float32(0.0)
+        n_int = 50
+        for _ in range(n_int):
+            arr, phase = spread_arrivals(SP, rate, phase)
+            total += int(np.asarray(arr).sum())
+        expect = float(rate) * SP.k_ticks * SP.dt * n_int
+        assert abs(total - expect) <= 1.0  # not floor()*n_int = -18 deficit
+
+    def test_action_caps_are_positive_and_discrete(self):
+        cfg = FCPOConfig()
+        from repro.core.env import default_env_params
+        ep = default_env_params()
+        for a in ([0, 0, 0], [3, 6, 3], [1, 4, 2]):
+            caps = np.asarray(action_caps(cfg, SP, ep,
+                                          jnp.asarray(a, jnp.int32)))
+            assert caps.shape == (kref.SIM_NCAPS,)
+            assert (caps > 0).all()
+            for i in (kref.CAP_BATCH, kref.CAP_TBATCH, kref.CAP_QCAP,
+                      kref.CAP_SLO):
+                assert caps[i] == int(caps[i])  # integer-valued
+            assert caps[kref.CAP_QCAP] <= SP.ring // 3
+
+    def test_hist_percentile(self):
+        hist = jnp.asarray([0, 10, 0, 0, 0, 0, 0, 1])
+        assert int(hist_percentile(hist, 0.5)) == 1
+        assert int(hist_percentile(hist, 0.99)) == 7
+        assert int(hist_percentile(jnp.zeros(8, jnp.int32), 0.5)) == 0
+
+    def test_sim_interval_batched_equals_single(self):
+        a = 3
+        state = _batched_state(a)
+        arrivals, caps = _random_args(a, KEY)
+        out = sim_interval(state, arrivals, caps)
+        one = sim_interval_ref(jax.tree.map(lambda x: x[1], state),
+                               arrivals[1], caps[1])
+        for name, b, s in zip(SimState._fields, out, one):
+            np.testing.assert_array_equal(np.asarray(b[1]), np.asarray(s),
+                                          err_msg=name)

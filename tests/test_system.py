@@ -3,6 +3,7 @@ warm start, and CRL adaptation — the paper's system-level claims in miniature.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.fcpo import FCPOConfig
 from repro.core.fleet import fleet_init, fleet_episode, fl_round, train_fleet
@@ -38,6 +39,21 @@ class TestServingEngine:
         assert info["bucket"] == (4, 32)
         assert logits.shape[0] == 3
         assert eng.stats["padded_tokens"] > 0
+
+    def test_oversized_request_raises_clear_error(self):
+        """Regression: sizes beyond the largest compiled bucket used to fall
+        through to buckets[-1], drive the pad amounts negative, and crash
+        inside jnp.pad with an opaque error. They must raise a clear
+        ValueError instead."""
+        eng = self._engine()
+        too_many = jax.random.randint(KEY, (5, 8), 0, 128)  # b=5 > max 4
+        with pytest.raises(ValueError, match="bucket"):
+            eng.prefill(too_many)
+        with pytest.raises(ValueError, match="bucket"):
+            eng.generate(too_many, steps=2)
+        too_long = jax.random.randint(KEY, (2, 40), 0, 128)  # s=40 > max 32
+        with pytest.raises(ValueError, match="bucket"):
+            eng.prefill(too_long)
 
     def test_prefill_decode_agree_with_plain_forward(self):
         eng = self._engine(cache_dtype=jnp.float32)

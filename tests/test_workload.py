@@ -1,0 +1,96 @@
+"""Workload-trace generators (data/workload.py): shapes, clip bounds,
+switching segment structure, and OOD statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.workload import (DYNAMIC, PROFILING, fleet_traces,
+                                 make_trace, ood_traces, switching_traces)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestMakeTrace:
+    def test_shape_dtype_and_bounds(self):
+        tr = np.asarray(make_trace(KEY, 500))
+        assert tr.shape == (500,) and tr.dtype == np.float32
+        assert (tr >= 1.0).all() and (tr <= 400.0).all()
+
+    def test_clips_at_upper_bound_under_extreme_bursts(self):
+        tr = np.asarray(make_trace(KEY, 200, base_rate=100.0,
+                                   burst_prob=1.0, burst_scale=1000.0))
+        assert tr.max() == 400.0
+
+    def test_clips_at_lower_bound_for_tiny_base(self):
+        tr = np.asarray(make_trace(KEY, 200, base_rate=0.01))
+        assert tr.min() == 1.0
+
+    def test_profiling_regime_is_narrower_than_dynamic(self):
+        prof = np.asarray(make_trace(KEY, 600, **PROFILING))
+        dyn = np.asarray(make_trace(KEY, 600, **DYNAMIC))
+        assert np.std(prof) / np.mean(prof) < np.std(dyn) / np.mean(dyn)
+
+
+class TestFleetTraces:
+    def test_shape_bounds_and_heterogeneity(self):
+        a, n = 8, 300
+        tr = np.asarray(fleet_traces(KEY, a, n, heterogeneity=0.9))
+        assert tr.shape == (a, n)
+        assert (tr >= 1.0).all() and (tr <= 400.0).all()
+        means = tr.mean(axis=1)
+        assert means.max() / means.min() > 1.5  # per-agent base rates differ
+
+    def test_trace_kwargs_flow_through(self):
+        calm = np.asarray(fleet_traces(KEY, 4, 300, **PROFILING))
+        wild = np.asarray(fleet_traces(KEY, 4, 300, **DYNAMIC))
+        assert np.std(calm, axis=1).mean() < np.std(wild, axis=1).mean()
+
+
+class TestSwitchingTraces:
+    def test_shape_and_bounds(self):
+        tr = np.asarray(switching_traces(KEY, 4, 310, segment=50))
+        assert tr.shape == (4, 310)
+        assert (tr >= 1.0).all() and (tr <= 400.0).all()
+
+    def test_segment_boundaries_hold_a_single_source(self):
+        """Within one segment the underlying base rate is constant (only
+        AR(1) noise on top, whose stationary spread is ~7%), so every
+        segment mean must sit near ONE of the source rates — and with
+        sources 16x apart the nearest-base classification is unambiguous."""
+        bases = (15.0, 240.0)
+        seg = 50
+        tr = np.asarray(switching_traces(KEY, 4, 400, segment=seg,
+                                         base_rates=bases))
+        labels = set()
+        for agent in tr:
+            for s in range(400 // seg):
+                mean = agent[s * seg:(s + 1) * seg].mean()
+                rel = [abs(mean / b - 1.0) for b in bases]
+                assert min(rel) < 0.5, f"segment mean {mean} near no source"
+                labels.add(int(np.argmin(rel)))
+        assert labels == {0, 1}  # both sources actually appear
+
+    def test_within_segment_variation_is_noise_scale(self):
+        tr = np.asarray(switching_traces(KEY, 4, 400, segment=50,
+                                         base_rates=(15.0, 240.0)))
+        for agent in tr:
+            for s in range(8):
+                win = agent[s * 50:(s + 1) * 50]
+                assert win.max() / win.min() < 4.0  # no hidden source switch
+
+
+class TestOODTraces:
+    def test_shape_bounds_and_statistics(self):
+        a, n = 16, 400
+        tr = np.asarray(ood_traces(KEY, a, n))
+        assert tr.shape == (a, n)
+        assert (tr >= 1.0).all() and (tr <= 400.0).all()
+        # base 60 with ±0.8 heterogeneity: fleet mean stays in a wide band
+        assert 30.0 < tr.mean() < 110.0
+
+    def test_ood_is_burstier_than_profiling_distribution(self):
+        prof = np.asarray(fleet_traces(KEY, 8, 400, base_rate=60.0,
+                                       **PROFILING))
+        ood = np.asarray(ood_traces(KEY, 8, 400))
+        cv = lambda x: (np.std(x, axis=1) / np.mean(x, axis=1)).mean()
+        assert cv(ood) > 2.0 * cv(prof)
