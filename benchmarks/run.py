@@ -10,7 +10,8 @@ import traceback
 from benchmarks import (fig7_end2end, fig7b_fl_latency, fig8_learning,
                         fig9_slo, fig10_warmstart, fig11_overhead,
                         fig12_ablation_heads, fig13_crl, fig14_frl_scaling,
-                        fig_buffer_perf, fig_sim_fidelity, roofline)
+                        fig_buffer_perf, fig_sim_fidelity, fig_twin_training,
+                        roofline)
 from benchmarks.common import emit_csv
 
 BENCHES = [
@@ -25,6 +26,7 @@ BENCHES = [
     ("fig14_frl_scaling", fig14_frl_scaling.main),
     ("fig_buffer_perf", fig_buffer_perf.main),
     ("fig_sim_fidelity", fig_sim_fidelity.main),
+    ("fig_twin_training", fig_twin_training.main),
     ("roofline", roofline.main),
 ]
 

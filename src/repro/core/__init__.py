@@ -2,6 +2,8 @@
 from repro.configs.fcpo import FCPOConfig, DEFAULT  # noqa: F401
 from repro.core.agent import (ActionMask, agent_forward, agent_init,  # noqa: F401
                               full_mask, sample_actions)
+from repro.core.backends import (BACKENDS, EnvBackend, FluidBackend,  # noqa: F401
+                                 TwinBackend, TwinEnvState, get_backend)
 from repro.core.buffer import (DiversityBuffer, buffer_init, buffer_insert,  # noqa: F401
                                buffer_insert_batch, buffer_insert_reference)
 from repro.core.crl import AgentState, crl_episode, run_episode  # noqa: F401

@@ -1,0 +1,213 @@
+"""Pluggable environment backends — "train where you serve".
+
+An ``EnvBackend`` is the per-agent environment contract of the CRL loop:
+``init`` builds one agent's environment state, ``observe`` reads the 8-dim
+iAgent state vector (one definition for every backend —
+``core.env.observe_vector``), ``step`` advances one control interval and
+returns (state, reward, info). Everything is a pure function of per-agent
+pytrees, so a fleet is still ``vmap`` over the agent axis and the scanned
+driver (``core.fleet.train_fleet_scan``) stays ONE jitted program regardless
+of backend.
+
+Two interchangeable implementations:
+
+* ``FluidBackend`` — the original fluid MDP (``core/env.py``): rates flow
+  through Little's-law queues, one env step per control interval, the SLO
+  enters the reward as a binary per-interval cutoff. Cheap, differentiable
+  intuition — but benchmarks/fig_sim_fidelity.py measured an ~80% effective
+  -throughput gap against per-request reality.
+* ``TwinBackend`` — the request-level digital twin (``repro.sim``): each
+  control-interval step nests K microticks of the discrete-event data plane
+  through the shared ``kernels/ref.py: sim_microtick`` math (jnp scan, or
+  the fused Pallas ``queue_advance`` kernel with ``use_pallas=True``), and
+  the reward is computed from request-grade completions and *per-request
+  deadline misses* instead of the fluid binary interval cutoff. Training on
+  this backend closes the sim-to-real gap the twin exposed
+  (benchmarks/fig_twin_training.py measures the A/B).
+
+Backends are frozen dataclasses — hashable, so they ride through ``jit`` as
+static arguments next to ``FCPOConfig``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core import env as env_mod
+from repro.sim.state import (SimParams, SimState, action_caps,
+                             effective_queue_cap, sim_init, spread_arrivals,
+                             warn_if_ring_clamps)
+from repro.sim.step import sim_interval_agent
+
+
+@dataclass(frozen=True)
+class EnvBackend:
+    """Interface: one agent's environment over control intervals."""
+
+    name = "abstract"
+
+    def init(self, cfg: FCPOConfig) -> Any:
+        raise NotImplementedError
+
+    def observe(self, cfg: FCPOConfig, ep: env_mod.EnvParams, state: Any,
+                rate) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def step(self, cfg: FCPOConfig, ep: env_mod.EnvParams, state: Any,
+             action, rate) -> Tuple[Any, jnp.ndarray, Dict[str, jnp.ndarray]]:
+        raise NotImplementedError
+
+    def check_env_params(self, ep: env_mod.EnvParams) -> None:
+        """Host-side sanity hook (called once by ``fleet_init`` on concrete
+        params, never under ``jit``): warn when the backend cannot honor the
+        device profile faithfully. Default: nothing to check."""
+
+
+@dataclass(frozen=True)
+class FluidBackend(EnvBackend):
+    """The fluid MDP of ``core/env.py`` behind the backend interface."""
+
+    name = "fluid"
+
+    def init(self, cfg):
+        return env_mod.env_init(cfg)
+
+    def observe(self, cfg, ep, state, rate):
+        return env_mod.observe(cfg, ep, state, rate)
+
+    def step(self, cfg, ep, state, action, rate):
+        return env_mod.env_step(cfg, ep, state, action, rate)
+
+
+class TwinEnvState(NamedTuple):
+    """One agent's twin environment state: the request-level pipeline plus
+    the control-plane carries the fluid MDP kept in ``EnvState``."""
+    sim: SimState            # pointer-segmented ring (repro.sim.state)
+    cur_action: jnp.ndarray  # (3,) int32 current (res, bs, mt)
+    drops_prev: jnp.ndarray  # () int32 admission drops in the last interval
+    phase: jnp.ndarray       # () float32 fractional-arrival carry
+    ema_lat: jnp.ndarray     # () float32 EMA of per-request mean latency (s)
+
+    # fl_round's Eq. 7 memory-availability stat reads ``env_state.pre_q``
+    # regardless of backend.
+    @property
+    def pre_q(self):
+        return self.sim.pre_q.astype(jnp.float32)
+
+    @property
+    def post_q(self):
+        return self.sim.post_q.astype(jnp.float32)
+
+
+@dataclass(frozen=True)
+class TwinBackend(EnvBackend):
+    """The request-level twin as a *training* environment.
+
+    One ``step`` = one control interval = ``sp.k_ticks`` nested microticks
+    of the discrete-event data plane — inside ``jit``/``vmap``/``lax.scan``,
+    zero host Python per microtick. ``use_pallas`` routes the interval
+    through the fused Pallas ``queue_advance`` kernel (bit-identical to the
+    jnp scan, tests/test_sim.py)."""
+
+    name = "twin"
+    sp: SimParams = field(default_factory=SimParams)
+    use_pallas: bool = False
+
+    def check_env_params(self, ep):
+        """The ``effective_queue_cap`` clamp guard on the TRAINING path —
+        same check as ``simulate_fleet``'s, one shared definition
+        (``sim.state.warn_if_ring_clamps``)."""
+        warn_if_ring_clamps(self.sp, jax.device_get(ep.queue_cap),
+                            stacklevel=4)
+
+    def init(self, cfg):
+        return TwinEnvState(
+            sim=sim_init(self.sp),
+            cur_action=jnp.zeros((3,), jnp.int32),
+            drops_prev=jnp.zeros((), jnp.int32),
+            phase=jnp.zeros((), jnp.float32),
+            ema_lat=jnp.zeros((), jnp.float32),
+        )
+
+    def observe(self, cfg, ep, state, rate):
+        return env_mod.observe_vector(
+            cfg, rate=rate, cur_action=state.cur_action,
+            drops=state.drops_prev, pre_q=state.sim.pre_q,
+            post_q=state.sim.post_q,
+            queue_cap=effective_queue_cap(self.sp, ep), slo_s=ep.slo_s)
+
+    def step(self, cfg, ep, state, action, rate):
+        sp = self.sp
+        caps = action_caps(cfg, sp, ep, action)
+        arrivals, phase = spread_arrivals(sp, rate, state.phase)
+        # sim/step.py owns the jnp-vs-Pallas interval dispatch
+        sim2 = sim_interval_agent(state.sim, arrivals, caps, self.use_pallas)
+
+        # request-grade interval deltas (the counters are cumulative)
+        d_comp = (sim2.completed - state.sim.completed).astype(jnp.float32)
+        d_eff = (sim2.effective - state.sim.effective).astype(jnp.float32)
+        d_drop = sim2.dropped - state.sim.dropped
+        mean_lat = ((sim2.lat_sum - state.sim.lat_sum)
+                    / jnp.maximum(d_comp, 1.0) * sp.dt)
+        # carry the EMA through empty intervals instead of decaying to zero
+        ema_lat = jnp.where(d_comp > 0,
+                            0.7 * state.ema_lat + 0.3 * mean_lat,
+                            state.ema_lat)
+
+        throughput = d_comp / sp.interval_s
+        effective = d_eff / sp.interval_s
+        miss_rate = (d_comp - d_eff) / sp.interval_s   # deadline misses /s
+        drop_rate = d_drop.astype(jnp.float32) / sp.interval_s
+
+        res_scale = jnp.asarray(cfg.res_scales)[action[0]]
+        bs = jnp.asarray(cfg.bs_values, jnp.float32)[action[1]]
+
+        # Eq. 1 on request-grade quantities: the throughput term counts only
+        # completions, the latency term is the EMA of *measured* per-request
+        # latency, and the oversize penalty grows with per-request deadline
+        # misses and admission drops — not the fluid binary interval cutoff.
+        safe_rate = jnp.maximum(rate, 1.0)
+        r = 0.5 * (cfg.theta * throughput / safe_rate
+                   - cfg.sigma * ema_lat
+                   - cfg.phi * (bs + miss_rate + drop_rate) / safe_rate)
+        r = jnp.tanh(r)
+
+        new_state = TwinEnvState(sim=sim2, cur_action=action.astype(jnp.int32),
+                                 drops_prev=d_drop, phase=phase,
+                                 ema_lat=ema_lat)
+        info = {
+            "throughput": throughput,
+            "effective_throughput": effective,
+            "latency": jnp.where(d_comp > 0, mean_lat, ema_lat),
+            "drops": d_drop.astype(jnp.float32),
+            "accuracy_proxy": res_scale ** 0.3,
+            "batch_latency": ep.t0 + ep.t1 * bs * res_scale ** 2,
+        }
+        return new_state, r, info
+
+
+FLUID = FluidBackend()
+BACKENDS = ("fluid", "twin")
+
+
+def get_backend(spec: Union[str, EnvBackend, None],
+                sim_params: SimParams = None,
+                use_pallas: bool = False) -> EnvBackend:
+    """Resolve a backend: an ``EnvBackend`` passes through; ``"fluid"`` /
+    ``"twin"`` / ``None`` (= fluid) build one. ``sim_params``/``use_pallas``
+    configure the twin when built here and are meaningless for (ignored by)
+    the fluid backend — CLI layers should reject that combination
+    (``launch/train_fleet.py`` does)."""
+    if isinstance(spec, EnvBackend):
+        return spec
+    if spec is None or spec == "fluid":
+        return FLUID
+    if spec == "twin":
+        return TwinBackend(sp=sim_params or SimParams(),
+                           use_pallas=use_pallas)
+    raise ValueError(f"unknown env backend {spec!r}; "
+                     f"choose from {BACKENDS}")

@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.fcpo import FCPOConfig
 from repro.core import env as env_mod
 from repro.core.agent import ActionMask, agent_init, full_mask, sample_actions
+from repro.core.backends import get_backend
 from repro.core.crl import AgentState, crl_episode, run_episode
 from repro.core.buffer import buffer_init
 from repro.core.fleet import Fleet, fleet_init, fleet_episode
@@ -57,11 +58,14 @@ def bcedge_masks(cfg: FCPOConfig, n_devices: int) -> ActionMask:
 
 
 def run_bcedge(n_replicas: int, traces, key, replicas_per_device: int = 4,
-               offline_episodes: int = 120, seed: int = 0) -> Dict[str, np.ndarray]:
+               offline_episodes: int = 120, seed: int = 0,
+               env_backend=None) -> Dict[str, np.ndarray]:
     """Offline-train one device-agent on profiling traces, then run frozen.
     Device agents act from the mean state of their replicas and broadcast
-    one action to all of them."""
+    one action to all of them. ``env_backend`` selects the environment both
+    phases run in (fluid MDP default, request-level twin with ``"twin"``)."""
     cfg = bcedge_config()
+    backend = get_backend(env_backend)
     n_dev = max(1, n_replicas // replicas_per_device)
     masks = bcedge_masks(cfg, n_dev)
 
@@ -70,26 +74,28 @@ def run_bcedge(n_replicas: int, traces, key, replicas_per_device: int = 4,
     # conditions of devices") — narrow distribution, uniform device speed ---
     from repro.data.workload import PROFILING
     dev_fleet = fleet_init(cfg, n_dev, key, masks=masks,
-                           speeds=jnp.ones((n_dev,)))
+                           speeds=jnp.ones((n_dev,)), env_backend=backend)
     prof = fleet_traces(jax.random.fold_in(key, 1), n_dev,
                         offline_episodes * cfg.n_steps, heterogeneity=0.0,
                         **PROFILING)
     for e in range(offline_episodes):
         r = prof[:, e * cfg.n_steps:(e + 1) * cfg.n_steps]
-        dev_fleet, _, _ = fleet_episode(cfg, dev_fleet, r, learn=True)
+        dev_fleet, _, _ = fleet_episode(cfg, dev_fleet, r, learn=True,
+                                        backend=backend)
 
     # --- runtime: frozen; device agent drives all its replicas ---
     rep_env = jax.vmap(lambda s: env_mod.default_env_params(s, cfg.slo_s))(
         jnp.asarray(np.random.default_rng(seed).choice(
             [0.5, 0.75, 1.0, 2.0], n_replicas)))
-    rep_states = jax.vmap(lambda _: env_mod.env_init(cfg))(jnp.arange(n_replicas))
+    backend.check_env_params(rep_env)
+    rep_states = jax.vmap(lambda _: backend.init(cfg))(jnp.arange(n_replicas))
     dev_of = jnp.arange(n_replicas) % n_dev
     params = dev_fleet.astate.params
     rng = key
 
     @jax.jit
     def run_step(rep_states, rates, rng):
-        obs = jax.vmap(lambda ep, st, r: env_mod.observe(cfg, ep, st, r))(
+        obs = jax.vmap(lambda ep, st, r: backend.observe(cfg, ep, st, r))(
             rep_env, rep_states, rates)
         # device agent sees the MEAN state of its replicas (bottleneck)
         dev_obs = jax.ops.segment_sum(obs, dev_of, n_dev) / jnp.maximum(
@@ -100,7 +106,7 @@ def run_bcedge(n_replicas: int, traces, key, replicas_per_device: int = 4,
         )(params, dev_obs, dev_fleet.masks, jax.random.split(k, n_dev))
         actions = dev_actions[dev_of]
         rep_states, r, info = jax.vmap(
-            lambda ep, st, a, rt: env_mod.env_step(cfg, ep, st, a, rt)
+            lambda ep, st, a, rt: backend.step(cfg, ep, st, a, rt)
         )(rep_env, rep_states, actions, rates)
         return rep_states, rng, r, info
 
@@ -119,16 +125,18 @@ def run_bcedge(n_replicas: int, traces, key, replicas_per_device: int = 4,
 
 
 def _static_policy_run(cfg: FCPOConfig, n_replicas: int, traces, seed,
-                       pick_action) -> Dict[str, np.ndarray]:
+                       pick_action, env_backend=None) -> Dict[str, np.ndarray]:
     """Run a non-RL policy: ``pick_action(avg_rates (A,), t) -> (A,3)``."""
+    backend = get_backend(env_backend)
     rep_env = jax.vmap(lambda s: env_mod.default_env_params(s, cfg.slo_s))(
         jnp.asarray(np.random.default_rng(seed).choice(
             [0.5, 0.75, 1.0, 2.0], n_replicas)))
-    states = jax.vmap(lambda _: env_mod.env_init(cfg))(jnp.arange(n_replicas))
+    backend.check_env_params(rep_env)
+    states = jax.vmap(lambda _: backend.init(cfg))(jnp.arange(n_replicas))
 
     @jax.jit
     def step(states, actions, rates):
-        return jax.vmap(lambda ep, st, a, rt: env_mod.env_step(cfg, ep, st, a, rt)
+        return jax.vmap(lambda ep, st, a, rt: backend.step(cfg, ep, st, a, rt)
                         )(rep_env, states, actions, rates)
 
     hist: Dict[str, list] = {}
@@ -148,7 +156,8 @@ def _static_policy_run(cfg: FCPOConfig, n_replicas: int, traces, seed,
 
 
 def run_octopinf(n_replicas: int, traces, seed: int = 0, period: int = 300,
-                 cfg: FCPOConfig = None) -> Dict[str, np.ndarray]:
+                 cfg: FCPOConfig = None,
+                 env_backend=None) -> Dict[str, np.ndarray]:
     """Periodic global scheduling: grid-search the best static config for the
     trailing-window average rate, re-plan every ``period`` intervals."""
     cfg = cfg or FCPOConfig()
@@ -180,13 +189,16 @@ def run_octopinf(n_replicas: int, traces, seed: int = 0, period: int = 300,
             best_static(avg[i], float(rep_env.t0[i]), float(rep_env.t1[i]))
             for i in range(len(avg))])
 
-    return _static_policy_run(cfg, n_replicas, traces, seed, pick)
+    return _static_policy_run(cfg, n_replicas, traces, seed, pick,
+                              env_backend=env_backend)
 
 
 def run_distream(n_replicas: int, traces, seed: int = 0,
-                 cfg: FCPOConfig = None) -> Dict[str, np.ndarray]:
+                 cfg: FCPOConfig = None,
+                 env_backend=None) -> Dict[str, np.ndarray]:
     """No runtime parameter optimization: bs=1, full res, 1 thread."""
     cfg = cfg or FCPOConfig()
     fixed = np.tile(np.asarray([[0, 0, 0]]), (n_replicas, 1))
     return _static_policy_run(cfg, n_replicas, traces, seed,
-                              lambda tr, t, ep: fixed)
+                              lambda tr, t, ep: fixed,
+                              env_backend=env_backend)

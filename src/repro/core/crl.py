@@ -1,7 +1,11 @@
 """Continual RL driver (§IV-C): episode rollout + gated online update.
 
 ``run_episode`` scans ``n_steps`` control intervals: observe -> sample
-cascaded actions -> env step. The diversity-buffer maintenance is hoisted
+cascaded actions -> env step, all through a pluggable ``EnvBackend``
+(``core.backends``): the fluid MDP (default) or the request-level twin,
+whose control-interval step nests K data-plane microticks — same episode
+loop, same scanned fleet driver, "train where you serve". The
+diversity-buffer maintenance is hoisted
 OUT of the scan body: the buffer is write-only during a rollout, so the
 whole episode's candidates are ingested after the scan with ONE
 ``buffer_insert_batch`` call through the streaming-moment engine — the scan
@@ -22,6 +26,7 @@ import jax.numpy as jnp
 from repro.configs.fcpo import FCPOConfig
 from repro.core import env as env_mod
 from repro.core.agent import ActionMask, sample_actions
+from repro.core.backends import FLUID, EnvBackend
 from repro.core.buffer import (DiversityBuffer, buffer_insert_batch,
                                buffer_insert_reference)
 from repro.core.ppo import Rollout, agent_update
@@ -37,7 +42,7 @@ class AgentState(NamedTuple):
 
 def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
                 rates: jnp.ndarray, mask: ActionMask,
-                use_pallas: bool = False
+                use_pallas: bool = False, backend: EnvBackend = FLUID
                 ) -> Tuple[AgentState, Rollout, Dict[str, jnp.ndarray]]:
     """Collect one episode (rates: (n_steps,) arrivals per interval).
 
@@ -46,14 +51,17 @@ def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
     ``buffer_insert_batch`` ingests them afterwards — trajectory-identical to
     per-step inserts (tests/test_buffer.py) but with the diversity scoring
     off the step critical path. ``use_pallas`` routes the batch insert
-    through the fused Pallas kernel instead of the jnp streaming scan."""
+    through the fused Pallas kernel instead of the jnp streaming scan.
+    ``backend`` selects the environment (``core.backends``): the fluid MDP
+    or the request-level twin; ``astate.env_state`` must be that backend's
+    state pytree (``fleet_init(..., env_backend=...)``)."""
 
     def step(carry, rate):
         est, rng = carry
         rng, krng = jax.random.split(rng)
-        obs = env_mod.observe(cfg, ep, est, rate)
+        obs = backend.observe(cfg, ep, est, rate)
         actions, logp, out = sample_actions(cfg, astate.params, obs, mask, krng)
-        est2, reward, info = env_mod.env_step(cfg, ep, est, actions, rate)
+        est2, reward, info = backend.step(cfg, ep, est, actions, rate)
         probs = jnp.concatenate([jnp.exp(out["res"]), jnp.exp(out["bs"]),
                                  jnp.exp(out["mt"])], axis=-1)
         ys = (obs, actions, logp, reward, out["value"], probs, info)
@@ -81,7 +89,7 @@ def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
 
 def run_episode_reference(cfg: FCPOConfig, ep: env_mod.EnvParams,
                           astate: AgentState, rates: jnp.ndarray,
-                          mask: ActionMask
+                          mask: ActionMask, backend: EnvBackend = FLUID
                           ) -> Tuple[AgentState, Rollout,
                                      Dict[str, jnp.ndarray]]:
     """The seed episode loop: per-step recompute-oracle buffer inserts
@@ -93,9 +101,9 @@ def run_episode_reference(cfg: FCPOConfig, ep: env_mod.EnvParams,
     def step(carry, rate):
         est, buf, rng = carry
         rng, krng = jax.random.split(rng)
-        obs = env_mod.observe(cfg, ep, est, rate)
+        obs = backend.observe(cfg, ep, est, rate)
         actions, logp, out = sample_actions(cfg, astate.params, obs, mask, krng)
-        est2, reward, info = env_mod.env_step(cfg, ep, est, actions, rate)
+        est2, reward, info = backend.step(cfg, ep, est, actions, rate)
         probs = jnp.concatenate([jnp.exp(out["res"]), jnp.exp(out["bs"]),
                                  jnp.exp(out["mt"])], axis=-1)
         buf = buffer_insert_reference(cfg, buf, obs, actions, logp, reward,
@@ -121,10 +129,12 @@ def run_episode_reference(cfg: FCPOConfig, ep: env_mod.EnvParams,
 
 
 def crl_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
-                rates: jnp.ndarray, mask: ActionMask, learn: bool = True
+                rates: jnp.ndarray, mask: ActionMask, learn: bool = True,
+                backend: EnvBackend = FLUID
                 ) -> Tuple[AgentState, Rollout, Dict[str, jnp.ndarray]]:
     """Episode + gated online update (the CRL inner loop)."""
-    astate, rollout, metrics = run_episode(cfg, ep, astate, rates, mask)
+    astate, rollout, metrics = run_episode(cfg, ep, astate, rates, mask,
+                                           backend=backend)
     if learn:
         params, opt, lm = agent_update(cfg, astate.params, astate.opt,
                                        rollout, mask)

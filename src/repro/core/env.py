@@ -83,18 +83,32 @@ def env_init(cfg: FCPOConfig) -> EnvState:
     )
 
 
-def observe(cfg: FCPOConfig, ep: EnvParams, s: EnvState, rate) -> jnp.ndarray:
-    """The 8-dim state vector of §IV-B."""
+def observe_vector(cfg: FCPOConfig, *, rate, cur_action, drops, pre_q,
+                   post_q, queue_cap, slo_s) -> jnp.ndarray:
+    """THE 8-dim iAgent state vector of §IV-B — the single definition.
+
+    Every environment backend (the fluid MDP here, the request-level twin in
+    ``repro.sim``) reads its raw quantities off its own state and normalizes
+    them through this one function, so a policy trained on one backend
+    transfers to the other without retargeting and the two observation paths
+    cannot drift (tests/test_backends.py asserts field-for-field parity)."""
     return jnp.stack([
         rate / 100.0,
-        s.cur_action[0].astype(jnp.float32) / max(cfg.n_res - 1, 1),
-        s.cur_action[1].astype(jnp.float32) / max(cfg.n_bs - 1, 1),
-        s.cur_action[2].astype(jnp.float32) / max(cfg.n_mt - 1, 1),
-        s.drops / 50.0,
-        s.pre_q / ep.queue_cap,
-        s.post_q / ep.queue_cap,
-        ep.slo_s / 0.5,
+        cur_action[0].astype(jnp.float32) / max(cfg.n_res - 1, 1),
+        cur_action[1].astype(jnp.float32) / max(cfg.n_bs - 1, 1),
+        cur_action[2].astype(jnp.float32) / max(cfg.n_mt - 1, 1),
+        jnp.asarray(drops, jnp.float32) / 50.0,
+        jnp.asarray(pre_q, jnp.float32) / queue_cap,
+        jnp.asarray(post_q, jnp.float32) / queue_cap,
+        slo_s / 0.5,
     ])
+
+
+def observe(cfg: FCPOConfig, ep: EnvParams, s: EnvState, rate) -> jnp.ndarray:
+    """The 8-dim state vector read off the fluid MDP state."""
+    return observe_vector(cfg, rate=rate, cur_action=s.cur_action,
+                          drops=s.drops, pre_q=s.pre_q, post_q=s.post_q,
+                          queue_cap=ep.queue_cap, slo_s=ep.slo_s)
 
 
 def env_step(cfg: FCPOConfig, ep: EnvParams, s: EnvState, action, rate):

@@ -33,6 +33,7 @@ from repro.configs.fcpo import FCPOConfig
 from repro.core import env as env_mod
 from repro.core import federated as fed
 from repro.core.agent import ActionMask, agent_init, full_mask
+from repro.core.backends import FLUID, EnvBackend, get_backend
 from repro.core.buffer import (buffer_diversity_mean, buffer_init,
                                buffer_resync)
 from repro.core.crl import AgentState, crl_episode
@@ -110,13 +111,19 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
                masks: Optional[ActionMask] = None,
                speeds: Optional[jnp.ndarray] = None,
                bandwidth: Optional[jnp.ndarray] = None,
-               slo_s: Optional[float] = None, mesh=None) -> Fleet:
+               slo_s: Optional[float] = None, mesh=None,
+               env_backend=None) -> Fleet:
+    """``env_backend``: ``"fluid"`` (default) / ``"twin"`` / an
+    ``EnvBackend`` — the per-agent ``astate.env_state`` leaves are that
+    backend's state pytree, so pass the SAME backend to the training
+    drivers."""
+    backend = get_backend(env_backend)
     kp, kb, ke, kr = jax.random.split(key, 4)
     agent_keys = jax.random.split(kp, n_agents)
     params = jax.vmap(lambda k: agent_init(cfg, k))(agent_keys)
     opt = jax.vmap(agent_opt_init)(params)
     buffers = jax.vmap(lambda _: buffer_init(cfg))(jnp.arange(n_agents))
-    env_states = jax.vmap(lambda _: env_mod.env_init(cfg))(jnp.arange(n_agents))
+    env_states = jax.vmap(lambda _: backend.init(cfg))(jnp.arange(n_agents))
     rngs = jax.random.split(kr, n_agents)
 
     if speeds is None:  # heterogeneous device mix (Orin/NX/AGX/server-like)
@@ -127,6 +134,7 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
             np.random.default_rng(1).uniform(2.0, 40.0, n_agents))
     env_params = jax.vmap(lambda s: env_mod.default_env_params(
         s, cfg.slo_s if slo_s is None else slo_s))(speeds)
+    backend.check_env_params(env_params)
 
     if masks is None:
         masks = jax.tree.map(lambda m: jnp.broadcast_to(m, (n_agents,) + m.shape),
@@ -151,13 +159,14 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
     return fleet
 
 
-@partial(jax.jit, static_argnums=0, static_argnames=("learn",))
+@partial(jax.jit, static_argnums=0, static_argnames=("learn", "backend"))
 def fleet_episode(cfg: FCPOConfig, fleet: Fleet, rates: jnp.ndarray,
-                  learn: bool = True):
+                  learn: bool = True, backend: EnvBackend = FLUID):
     """One CRL episode for all agents. rates: (A, n_steps).
-    Returns (fleet, rollouts, metrics)."""
+    Returns (fleet, rollouts, metrics). ``backend`` (static, hashable)
+    selects the environment the episodes run in."""
     astate, rollouts, metrics = jax.vmap(
-        lambda ep, st, r, m: crl_episode(cfg, ep, st, r, m, learn)
+        lambda ep, st, r, m: crl_episode(cfg, ep, st, r, m, learn, backend)
     )(fleet.env_params, fleet.astate, rates, fleet.masks)
     fleet = fleet._replace(astate=astate, episode=fleet.episode + 1)
     return fleet, rollouts, metrics
@@ -211,10 +220,12 @@ def pod_merge(cfg: FCPOConfig, fleet: Fleet):
 
 def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                           learn: bool = True, federated: bool = True,
-                          straggler_prob: float = 0.0, seed: int = 0):
+                          straggler_prob: float = 0.0, seed: int = 0,
+                          env_backend=None):
     """The original Python-loop driver: one host dispatch per episode plus a
     per-metric host sync — O(n_episodes) dispatches. Kept as the equivalence
     oracle for ``train_fleet_scan`` (same seeds => same straggler draws)."""
+    backend = get_backend(env_backend)
     a, total = traces.shape
     n_eps = total // cfg.n_steps
     rng = np.random.default_rng(seed)
@@ -222,7 +233,8 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     rounds = 0
     for e in range(n_eps):
         rates = traces[:, e * cfg.n_steps:(e + 1) * cfg.n_steps]
-        fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates, learn=learn)
+        fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates,
+                                                 learn=learn, backend=backend)
         if federated and learn and (e + 1) % cfg.fl_every == 0:
             avail = jnp.asarray(rng.random(a) >= straggler_prob)
             fleet, _ = fl_round(cfg, fleet, rollouts, avail)
@@ -239,14 +251,16 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
 # compiled program
 # ---------------------------------------------------------------------------
 def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
-                 avail: jnp.ndarray, do_fl: jnp.ndarray, learn: bool):
+                 avail: jnp.ndarray, do_fl: jnp.ndarray, learn: bool,
+                 backend: EnvBackend):
     """Scan body host fn. rates_eps: (n_eps, A, n_steps); avail/do_fl:
     pre-drawn availability bits and FL schedule, consumed as scan xs."""
 
     def body(carry, xs):
         flt, rounds = carry
         rates, av, fl = xs
-        flt, rollouts, metrics = fleet_episode(cfg, flt, rates, learn=learn)
+        flt, rollouts, metrics = fleet_episode(cfg, flt, rates, learn=learn,
+                                               backend=backend)
 
         def with_fl(op):
             f, rnd = op
@@ -271,7 +285,7 @@ _SCAN_FNS: Dict[bool, Any] = {}
 
 def _scan_fn(donate: bool):
     if donate not in _SCAN_FNS:
-        kw = dict(static_argnums=(0, 5))
+        kw = dict(static_argnums=(0, 5, 6))
         if donate:
             kw["donate_argnums"] = (1,)
         _SCAN_FNS[donate] = jax.jit(_scan_driver, **kw)
@@ -281,7 +295,8 @@ def _scan_fn(donate: bool):
 def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                      learn: bool = True, federated: bool = True,
                      straggler_prob: float = 0.0, seed: int = 0,
-                     mesh=None, donate: Optional[bool] = None):
+                     mesh=None, donate: Optional[bool] = None,
+                     env_backend=None):
     """Scanned fleet driver: episodes over ``traces`` (A, total_steps), FL
     every ``fl_every`` episodes (stragglers masked by pre-drawn availability
     bits), cross-pod merge every ``hierarchical_period`` rounds — all inside
@@ -290,9 +305,13 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     ``mesh``: install fleet shardings (agents over data, pods over the FL
     hierarchy) on inputs before the call — the scan then runs SPMD.
     ``donate``: donate the input fleet's buffers to the compiled call
-    (defaults to on except on CPU, where XLA cannot donate). Returns
-    (fleet, history) with history as per-episode numpy arrays, fetched in a
-    single device->host transfer."""
+    (defaults to on except on CPU, where XLA cannot donate).
+    ``env_backend``: ``"fluid"`` / ``"twin"`` / an ``EnvBackend`` — with the
+    twin, every control interval nests K data-plane microticks *inside* the
+    same single scan (no host Python per microtick; ``fleet`` must have been
+    built with the same backend). Returns (fleet, history) with history as
+    per-episode numpy arrays, fetched in a single device->host transfer."""
+    backend = get_backend(env_backend)
     a, total = traces.shape
     n_eps = total // cfg.n_steps
     schedule = fed.fl_schedule(cfg, n_eps, federated=federated, learn=learn)
@@ -312,17 +331,18 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     if donate is None:
         donate = jax.default_backend() != "cpu"
     fleet, history = _scan_fn(bool(donate))(
-        cfg, fleet, rates_eps, avail, do_fl, learn)
+        cfg, fleet, rates_eps, avail, do_fl, learn, backend)
     return fleet, jax.device_get(history)
 
 
 def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                 learn: bool = True, federated: bool = True,
-                straggler_prob: float = 0.0, seed: int = 0):
+                straggler_prob: float = 0.0, seed: int = 0,
+                env_backend=None):
     """Compatibility entry point — delegates to the scanned driver. Buffer
     donation stays off so callers may keep using the input fleet (forking a
     fleet into warm/cold copies is a common pattern in the benchmarks)."""
     return train_fleet_scan(cfg, fleet, traces, learn=learn,
                             federated=federated,
                             straggler_prob=straggler_prob, seed=seed,
-                            donate=False)
+                            donate=False, env_backend=env_backend)

@@ -89,3 +89,74 @@ def ood_traces(key, n_agents: int, n_steps: int):
     return jax.vmap(lambda k, b: make_trace(
         k, n_steps, b, regime_period=30, regime_scale=1.0,
         burst_prob=0.08, burst_scale=2.0))(keys, bases)
+
+
+# Spiky event-camera workload: frequent short multi-x spikes on a moderate
+# base — stresses admission control and the deadline tail.
+BURST = dict(regime_scale=0.3, burst_prob=0.15, burst_scale=5.0)
+
+
+def diurnal_traces(key, n_agents: int, n_steps: int, base_rate: float = 40.0,
+                   amplitude: float = 0.7, cycles: float = 1.0):
+    """Day/night load cycle: a deep sinusoid (peak ≈ (1+amplitude)·base,
+    trough ≈ (1-amplitude)·base) with a per-agent phase offset (cameras in
+    different timezones / street orientations) plus AR(1) wander."""
+    kp, kb, kt = jax.random.split(key, 3)
+    phases = jax.random.uniform(kp, (n_agents,)) * 2 * jnp.pi
+    bases = base_rate * (1.0 + 0.3 * (
+        jax.random.uniform(kb, (n_agents,)) * 2 - 1))
+    t = jnp.arange(n_steps, dtype=jnp.float32)
+    keys = jax.random.split(kt, n_agents)
+
+    def one(k, b, ph):
+        cycle = 1.0 + amplitude * jnp.sin(
+            2 * jnp.pi * cycles * t / max(n_steps, 1) + ph)
+        noise = 1.0 + smooth_noise(k, n_steps, scale=0.2)
+        return jnp.clip(b * cycle * noise, 1.0, 400.0)
+
+    return jax.vmap(one)(keys, bases, phases)
+
+
+def flash_crowd_traces(key, n_agents: int, n_steps: int,
+                       base_rate: float = 25.0, surge_mult: float = 6.0,
+                       surge_frac: float = 0.25):
+    """Flash crowd: steady load, then a sudden *sustained* surge (a viral
+    event / accident on camera) of ``surge_frac`` of the horizon at
+    ``surge_mult``× the base rate, starting at a per-agent random step —
+    the regime an interval-granular scheduler reacts to a whole period
+    late."""
+    ks, kb, kt = jax.random.split(key, 3)
+    surge_len = max(int(n_steps * surge_frac), 1)
+    starts = jax.random.randint(ks, (n_agents,), n_steps // 8,
+                                max(n_steps - surge_len, n_steps // 8 + 1))
+    bases = base_rate * (1.0 + 0.3 * (
+        jax.random.uniform(kb, (n_agents,)) * 2 - 1))
+    t = jnp.arange(n_steps)
+    keys = jax.random.split(kt, n_agents)
+
+    def one(k, b, s0):
+        in_surge = (t >= s0) & (t < s0 + surge_len)
+        mult = jnp.where(in_surge, surge_mult, 1.0)
+        noise = 1.0 + smooth_noise(k, n_steps, scale=0.25)
+        return jnp.clip(b * mult * noise, 1.0, 400.0)
+
+    return jax.vmap(one)(keys, bases, starts)
+
+
+def drift_traces(key, n_agents: int, n_steps: int, start_rate: float = 15.0,
+                 end_rate: float = 90.0):
+    """Slow non-stationary drift: the base rate ramps monotonically from
+    ``start_rate`` to ``end_rate`` over the horizon (seasonal content
+    drift) — no single static configuration is right for the whole trace,
+    and a frozen policy degrades monotonically."""
+    kb, kt = jax.random.split(key)
+    jitter = 1.0 + 0.25 * (jax.random.uniform(kb, (n_agents,)) * 2 - 1)
+    t = jnp.arange(n_steps, dtype=jnp.float32)
+    ramp = start_rate + (end_rate - start_rate) * t / max(n_steps - 1, 1)
+    keys = jax.random.split(kt, n_agents)
+
+    def one(k, j):
+        noise = 1.0 + smooth_noise(k, n_steps, scale=0.25)
+        return jnp.clip(ramp * j * noise, 1.0, 400.0)
+
+    return jax.vmap(one)(keys, jitter)

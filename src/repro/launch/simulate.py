@@ -22,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.configs.fcpo import FCPOConfig
+from repro.core.backends import BACKENDS, get_backend
 from repro.core.fleet import fleet_init, train_fleet
 from repro.data.workload import fleet_traces
 from repro.sim import SCENARIOS, SimParams, make_scenario, simulate_fleet
@@ -34,8 +35,11 @@ def main(argv=None):
                     help="control intervals to simulate")
     ap.add_argument("--scenario", choices=SCENARIOS, default="dynamic")
     ap.add_argument("--train-episodes", type=int, default=0,
-                    help="fluid-MDP warmup episodes before evaluation "
+                    help="warmup training episodes before evaluation "
                          "(0 = untrained policies)")
+    ap.add_argument("--train-backend", choices=BACKENDS, default="fluid",
+                    help="environment backend the warmup episodes train in "
+                         "(twin = 'train where you serve')")
     ap.add_argument("--dt", type=float, default=0.05,
                     help="microtick length in seconds")
     ap.add_argument("--k-ticks", type=int, default=20,
@@ -65,19 +69,22 @@ def main(argv=None):
               f"-> {args.intervals} intervals")
     sp = SimParams(dt=args.dt, k_ticks=args.k_ticks, ring=args.ring,
                    hist_n=args.hist)
-    fleet = fleet_init(cfg, args.agents, jax.random.PRNGKey(args.seed))
+    train_be = get_backend(args.train_backend, sim_params=sp,
+                           use_pallas=args.pallas)
+    fleet = fleet_init(cfg, args.agents, jax.random.PRNGKey(args.seed),
+                       env_backend=train_be)
     if args.train_episodes > 0:
         warmup = fleet_traces(jax.random.PRNGKey(args.seed + 1), args.agents,
                               args.train_episodes * cfg.n_steps)
-        fleet, _ = train_fleet(cfg, fleet, warmup)
+        fleet, _ = train_fleet(cfg, fleet, warmup, env_backend=train_be)
     traces = make_scenario(args.scenario, jax.random.PRNGKey(args.seed + 2),
                            args.agents, args.intervals)
 
     print(f"twin: {args.agents} agents, {args.intervals} intervals, "
           f"K={sp.k_ticks} microticks of {sp.dt * 1e3:.0f} ms, "
           f"ring={sp.ring}, scenario={args.scenario}, "
-          f"pallas={args.pallas}, trained={args.train_episodes} eps, "
-          f"backend={jax.default_backend()}")
+          f"pallas={args.pallas}, trained={args.train_episodes} eps "
+          f"on {train_be.name}, backend={jax.default_backend()}")
     t0 = time.time()
     state, _, summ = simulate_fleet(cfg, sp, fleet.astate.params,
                                     fleet.masks, fleet.env_params, traces,
@@ -100,6 +107,9 @@ def main(argv=None):
     print(f"{'requests':24s}arrived={int(np.asarray(summ['arrived']).sum())} "
           f"completed={int(np.asarray(summ['completed']).sum())} "
           f"dropped={int(np.asarray(summ['dropped']).sum())}")
+    # >1% right-censored completions triggers warn_if_censored inside
+    # simulate_fleet (one shared check); the hist_censored row above is the
+    # always-on surface.
 
     if args.compare_fluid:
         hist = _fluid_eval(cfg, fleet, traces)
@@ -112,7 +122,15 @@ def main(argv=None):
 
 
 def _fluid_eval(cfg, fleet, traces):
-    """Evaluate (no learning) on the fluid MDP over the same traces."""
+    """Evaluate (no learning) on the fluid MDP over the same traces. The
+    fleet may have been trained on any backend — its env states are swapped
+    for fresh fluid ones so the policies (not the env leaves) carry over."""
+    from repro.core.env import env_init
+
+    a = traces.shape[0]
+    fluid_states = jax.vmap(lambda _: env_init(cfg))(jax.numpy.arange(a))
+    fleet = fleet._replace(astate=fleet.astate._replace(
+        env_state=fluid_states))
     n_eps = max(traces.shape[1] // cfg.n_steps, 1)
     _, hist = train_fleet(cfg, fleet, traces[:, :n_eps * cfg.n_steps],
                           learn=False, federated=False)

@@ -5,11 +5,16 @@ Alg. 1 aggregation -> Alg. 2 fine-tune -> hierarchical pod merge) as ONE
 compiled program via ``train_fleet_scan``. ``--driver reference`` selects the
 Python-loop oracle for A/B timing; ``--mesh`` installs the fleet shardings
 (agents over ``data``, pods over the FL hierarchy) so the same command is
-SPMD on a real mesh.
+SPMD on a real mesh; ``--env-backend twin`` trains in the request-level
+digital twin ("train where you serve") with K nested microticks per control
+interval — still one jitted scan; ``--scenario`` picks the workload from the
+scenario library (``repro.sim.scenarios``).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --pods 2 \
       --episodes 200
+  PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --episodes 100 \
+      --env-backend twin --scenario switching    # train in the twin
   PYTHONPATH=src python -m repro.launch.train_fleet --agents 16 --episodes 100 \
       --straggler-prob 0.3 --driver reference   # O(n_episodes) dispatches
   PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --mesh debug
@@ -22,10 +27,11 @@ import time
 import jax
 
 from repro.configs.fcpo import FCPOConfig
+from repro.core.backends import BACKENDS, get_backend
 from repro.core.fleet import (fleet_init, train_fleet_reference,
                               train_fleet_scan)
-from repro.data.workload import fleet_traces
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.sim import SCENARIOS, SimParams, make_scenario
 
 
 def main(argv=None):
@@ -41,15 +47,44 @@ def main(argv=None):
     ap.add_argument("--driver", choices=("scan", "reference"), default="scan")
     ap.add_argument("--mesh", choices=("none", "debug", "production"),
                     default="none")
+    ap.add_argument("--env-backend", choices=BACKENDS, default="fluid",
+                    help="environment the CRL episodes run in: the fluid "
+                         "MDP or the request-level digital twin")
+    ap.add_argument("--scenario", choices=SCENARIOS, default="nominal",
+                    help="workload scenario for the training traces "
+                         "(default: the historical make_trace workload — "
+                         "same seed reproduces pre-scenario-library runs)")
+    ap.add_argument("--dt", type=float, default=0.05,
+                    help="twin microtick length (s)")
+    ap.add_argument("--k-ticks", type=int, default=20,
+                    help="twin microticks per control interval")
+    ap.add_argument("--ring", type=int, default=512,
+                    help="twin ring capacity (power of two)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="route the twin data plane through the fused "
+                         "Pallas queue_advance kernel")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.episodes < 1:
         ap.error("--episodes must be >= 1")
     if args.fl_every is not None and args.fl_every < 1:
         ap.error("--fl-every must be >= 1 (use --no-federated to disable FL)")
+    if args.ring <= 0 or args.ring & (args.ring - 1):
+        ap.error("--ring must be a positive power of two")
+    if args.env_backend == "fluid" and (
+            args.pallas or args.dt != 0.05 or args.k_ticks != 20
+            or args.ring != 512):
+        ap.error("--pallas/--dt/--k-ticks/--ring configure the twin data "
+                 "plane and are silent no-ops on the fluid backend; add "
+                 "--env-backend twin")
 
     cfg = FCPOConfig() if args.fl_every is None else \
         FCPOConfig(fl_every=args.fl_every)
+    backend = get_backend(args.env_backend,
+                          sim_params=SimParams(dt=args.dt,
+                                               k_ticks=args.k_ticks,
+                                               ring=args.ring),
+                          use_pallas=args.pallas)
     mesh = None
     if args.mesh == "debug":
         mesh = make_debug_mesh(jax.device_count(), 1)
@@ -57,15 +92,17 @@ def main(argv=None):
         mesh = make_production_mesh(multi_pod=args.pods > 1)
 
     fleet = fleet_init(cfg, args.agents, jax.random.PRNGKey(args.seed),
-                       n_pods=args.pods, mesh=mesh)
-    traces = fleet_traces(jax.random.PRNGKey(args.seed + 1), args.agents,
-                          args.episodes * cfg.n_steps)
+                       n_pods=args.pods, mesh=mesh, env_backend=backend)
+    traces = make_scenario(args.scenario, jax.random.PRNGKey(args.seed + 1),
+                           args.agents, args.episodes * cfg.n_steps)
     print(f"fleet: {args.agents} iAgents, {args.pods} pods, "
           f"{args.episodes} episodes, driver={args.driver}, "
+          f"env={backend.name}, scenario={args.scenario}, "
           f"mesh={args.mesh}, backend={jax.default_backend()}")
 
     kw = dict(learn=not args.no_learn, federated=not args.no_federated,
-              straggler_prob=args.straggler_prob, seed=args.seed)
+              straggler_prob=args.straggler_prob, seed=args.seed,
+              env_backend=backend)
     t0 = time.time()
     if args.driver == "scan":
         fleet, hist = train_fleet_scan(cfg, fleet, traces, mesh=mesh, **kw)

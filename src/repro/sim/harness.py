@@ -11,39 +11,33 @@ host dispatches once and fetches the per-interval history once.
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.fcpo import FCPOConfig
 from repro.core.agent import ActionMask, sample_actions
-from repro.core.env import EnvParams
+from repro.core.env import EnvParams, observe_vector
 from repro.sim import metrics as sim_metrics
 from repro.sim.state import (SimParams, SimState, action_caps,
-                             effective_queue_cap, sim_init, spread_arrivals)
+                             effective_queue_cap, sim_init, spread_arrivals,
+                             warn_if_ring_clamps)
 from repro.sim.step import sim_interval
 
 
 def sim_observe(cfg: FCPOConfig, sp: SimParams, ep: EnvParams,
                 state: SimState, drops_prev, cur_action, rate):
     """The 8-dim iAgent state vector (§IV-B) read off the twin instead of
-    the fluid MDP: same normalizations as ``core.env.observe`` so a policy
-    trained on the fluid env transfers without retargeting."""
-    qcap = effective_queue_cap(sp, ep)
-    return jnp.stack([
-        rate / 100.0,
-        cur_action[0].astype(jnp.float32) / max(cfg.n_res - 1, 1),
-        cur_action[1].astype(jnp.float32) / max(cfg.n_bs - 1, 1),
-        cur_action[2].astype(jnp.float32) / max(cfg.n_mt - 1, 1),
-        drops_prev.astype(jnp.float32) / 50.0,
-        state.pre_q.astype(jnp.float32) / qcap,
-        state.post_q.astype(jnp.float32) / qcap,
-        ep.slo_s / 0.5,
-    ])
+    the fluid MDP. The normalization is ``core.env.observe_vector`` — the
+    ONE definition every backend shares — so a policy trained on the fluid
+    env transfers without retargeting (parity: tests/test_backends.py)."""
+    return observe_vector(cfg, rate=rate, cur_action=cur_action,
+                          drops=drops_prev, pre_q=state.pre_q,
+                          post_q=state.post_q,
+                          queue_cap=effective_queue_cap(sp, ep),
+                          slo_s=ep.slo_s)
 
 
 @partial(jax.jit, static_argnums=(0, 1), static_argnames=("use_pallas",))
@@ -99,15 +93,11 @@ def simulate_fleet(cfg: FCPOConfig, sp: SimParams, params,
     (A, T) control-interval arrival rates (requests/s). Returns
     (final SimState (A, ...), per-interval history dict of (T, A) arrays,
     per-agent request-grade summary incl. p50/p99 latency)."""
-    qcap = np.asarray(jax.device_get(env_params.queue_cap))
-    if (qcap > sp.ring // 3).any():
-        warnings.warn(
-            f"SimParams.ring={sp.ring} clamps queue_cap "
-            f"{float(qcap.max()):.0f} -> {sp.ring // 3} (ring must be >= "
-            f"3*queue_cap); twin dynamics and observation normalization "
-            f"will differ from the fluid env — raise `ring` to match the "
-            f"device profile", stacklevel=2)
+    warn_if_ring_clamps(sp, jax.device_get(env_params.queue_cap),
+                        stacklevel=2)
     state, history = _simulate(cfg, sp, params, masks, env_params,
                                jnp.asarray(traces, jnp.float32), key,
                                use_pallas=use_pallas)
-    return state, history, sim_metrics.summarize(state, sp)
+    summary = sim_metrics.summarize(state, sp)
+    sim_metrics.warn_if_censored(summary, sp, stacklevel=3)
+    return state, history, summary

@@ -2,9 +2,14 @@
 drops, and latency percentiles from the on-device histogram."""
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
+import numpy as np
 
 from repro.sim.state import SimParams, SimState
+
+CENSORED_WARN_FRACTION = 0.01
 
 
 def hist_percentile(hist: jnp.ndarray, q: float) -> jnp.ndarray:
@@ -51,3 +56,22 @@ def summarize(state: SimState, sp: SimParams) -> dict:
         "effective": state.effective,
         "in_flight": state.in_flight,
     }
+
+
+def warn_if_censored(summary: dict, sp: SimParams,
+                     threshold: float = CENSORED_WARN_FRACTION,
+                     stacklevel: int = 2) -> float:
+    """Host-side guard on histogram right-censoring: warn when the fraction
+    of completions in the top (censored) bucket exceeds ``threshold`` on any
+    agent — the reported p50/p99 are then lower bounds capped at
+    ``(hist_n - 1) * dt``. Returns the worst per-agent censored fraction.
+    Call on a concrete (fetched) ``summarize`` dict, never under ``jit``."""
+    frac = float(np.asarray(summary["hist_censored"]).max())
+    if frac > threshold:
+        warnings.warn(
+            f"latency histogram is right-censored: {frac * 100:.1f}% of "
+            f"completions landed in the top bucket (cap "
+            f"{(sp.hist_n - 1) * sp.dt * 1e3:.0f} ms) — p50/p99 are lower "
+            f"bounds; re-run with a larger SimParams.hist_n",
+            stacklevel=stacklevel)
+    return frac

@@ -1,4 +1,11 @@
-"""Canned twin evaluation scenarios over the workload-trace generators."""
+"""Scenario library: named workload scenarios over the trace generators.
+
+One registry used by BOTH training and evaluation — ``make_scenario`` feeds
+the fleet training CLI (``launch/train_fleet.py --scenario``), twin
+evaluations (``launch/simulate.py``), and the fluid-trained-vs-twin-trained
+benchmark (``benchmarks/fig_twin_training.py``), so "train on scenario X,
+evaluate on scenario Y" is a pair of names.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -9,12 +16,25 @@ from repro.data import workload
 def make_scenario(name: str, key, n_agents: int, n_intervals: int
                   ) -> jnp.ndarray:
     """(A, T) control-interval arrival-rate traces for a named scenario."""
+    if name == "nominal":
+        # make_trace defaults: the historical training workload of the fleet
+        # CLI/examples — same key => same traces as pre-scenario-library runs
+        return workload.fleet_traces(key, n_agents, n_intervals)
     if name == "steady":
         return workload.fleet_traces(key, n_agents, n_intervals,
                                      **workload.PROFILING)
     if name == "dynamic":
         return workload.fleet_traces(key, n_agents, n_intervals,
                                      **workload.DYNAMIC)
+    if name == "burst":
+        return workload.fleet_traces(key, n_agents, n_intervals,
+                                     **workload.BURST)
+    if name == "diurnal":
+        return workload.diurnal_traces(key, n_agents, n_intervals)
+    if name == "flash-crowd":
+        return workload.flash_crowd_traces(key, n_agents, n_intervals)
+    if name == "drift":
+        return workload.drift_traces(key, n_agents, n_intervals)
     if name == "switching":
         return workload.switching_traces(key, n_agents, n_intervals,
                                          segment=max(n_intervals // 5, 1))
@@ -24,4 +44,5 @@ def make_scenario(name: str, key, n_agents: int, n_intervals: int
                      f"choose from {sorted(SCENARIOS)}")
 
 
-SCENARIOS = ("steady", "dynamic", "switching", "ood")
+SCENARIOS = ("nominal", "steady", "dynamic", "burst", "diurnal",
+             "flash-crowd", "drift", "switching", "ood")

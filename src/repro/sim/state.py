@@ -17,10 +17,12 @@ curve), which is what makes fluid-vs-twin fidelity checks meaningful.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.fcpo import FCPOConfig
 from repro.core.env import EnvParams
@@ -110,6 +112,25 @@ def effective_queue_cap(sp: SimParams, ep: EnvParams) -> jnp.ndarray:
     """Per-stage queue capacity, clamped so the ring can never overflow
     (each of the three stage queues is bounded by it)."""
     return jnp.minimum(ep.queue_cap, float(sp.ring // 3))
+
+
+def warn_if_ring_clamps(sp: SimParams, queue_cap, stacklevel: int = 2) -> None:
+    """THE host-side guard on the ``effective_queue_cap`` clamp (one
+    definition for the evaluation harness and the training backend): warn
+    when the ring cannot hold 3x the device queue_cap, because the clamp
+    then changes twin dynamics, observation normalization, and — during
+    twin-backed training — ``fl_round``'s Eq. 7 memory-availability stat
+    (which normalizes ``pre_q`` by the *unclamped* cap). Call on concrete
+    params, never under ``jit``."""
+    qcap = np.asarray(queue_cap)
+    if (qcap > sp.ring // 3).any():
+        warnings.warn(
+            f"SimParams.ring={sp.ring} clamps queue_cap "
+            f"{float(qcap.max()):.0f} -> {sp.ring // 3} (ring must be >= "
+            f"3*queue_cap); twin dynamics, observation normalization, and "
+            f"the Eq. 7 memory-availability stat (twin-backed training) "
+            f"will differ from the fluid env — raise `ring` to match the "
+            f"device profile", stacklevel=stacklevel)
 
 
 def action_caps(cfg: FCPOConfig, sp: SimParams, ep: EnvParams,

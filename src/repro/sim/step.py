@@ -23,6 +23,18 @@ def sim_interval_ref(state: SimState, arrivals: jnp.ndarray,
     return SimState(*kref.queue_advance_ref(*state, arrivals, caps))
 
 
+def sim_interval_agent(state: SimState, arrivals: jnp.ndarray,
+                       caps: jnp.ndarray,
+                       use_pallas: bool = False) -> SimState:
+    """Advance ONE agent (the training-backend entry point — vmapped over
+    the fleet by ``fleet_episode``): the jnp oracle scan, or the fused
+    Pallas kernel, which accepts unbatched operands and carries a batching
+    rule, so this call is legal under ``vmap`` on either path."""
+    if use_pallas:
+        return SimState(*kops.queue_advance(*state, arrivals, caps))
+    return sim_interval_ref(state, arrivals, caps)
+
+
 def sim_interval(state: SimState, arrivals: jnp.ndarray, caps: jnp.ndarray,
                  use_pallas: bool = False) -> SimState:
     """Fleet-batched advance: state leaves (A, ...), arrivals (A, K), caps

@@ -1,11 +1,15 @@
 """Workload-trace generators (data/workload.py): shapes, clip bounds,
-switching segment structure, and OOD statistics."""
+switching segment structure, OOD statistics, and the scenario library."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.data.workload import (DYNAMIC, PROFILING, fleet_traces,
-                                 make_trace, ood_traces, switching_traces)
+from repro.data.workload import (BURST, DYNAMIC, PROFILING, diurnal_traces,
+                                 drift_traces, fleet_traces,
+                                 flash_crowd_traces, make_trace, ood_traces,
+                                 switching_traces)
+from repro.sim.scenarios import SCENARIOS, make_scenario
 
 KEY = jax.random.PRNGKey(0)
 
@@ -94,3 +98,47 @@ class TestOODTraces:
         ood = np.asarray(ood_traces(KEY, 8, 400))
         cv = lambda x: (np.std(x, axis=1) / np.mean(x, axis=1)).mean()
         assert cv(ood) > 2.0 * cv(prof)
+
+
+class TestScenarioLibrary:
+    @pytest.mark.parametrize("name", SCENARIOS)
+    def test_every_scenario_produces_valid_traces(self, name):
+        tr = np.asarray(make_scenario(name, KEY, 3, 120))
+        assert tr.shape == (3, 120) and tr.dtype == np.float32
+        assert (tr >= 1.0).all() and (tr <= 400.0).all()
+        assert np.isfinite(tr).all()
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(ValueError, match="unknown scenario"):
+            make_scenario("rush-hour", KEY, 2, 10)
+
+    def test_burst_is_spikier_than_steady(self):
+        burst = np.asarray(fleet_traces(KEY, 8, 400, **BURST))
+        calm = np.asarray(fleet_traces(KEY, 8, 400, **PROFILING))
+        peak = lambda x: (x.max(axis=1) / np.median(x, axis=1)).mean()
+        assert peak(burst) > 2.0 * peak(calm)
+
+    def test_diurnal_has_deep_cycle_and_agent_phases(self):
+        tr = np.asarray(diurnal_traces(KEY, 6, 360))
+        assert tr.shape == (6, 360)
+        # deep swing: per-agent max/min well beyond the AR-noise band
+        assert ((tr.max(axis=1) / tr.min(axis=1)) > 2.5).all()
+        # phase offsets: the argmax interval differs across agents
+        assert len(set(tr.argmax(axis=1) // 30)) > 1
+
+    def test_flash_crowd_surge_is_sustained_and_multiplied(self):
+        tr = np.asarray(flash_crowd_traces(KEY, 6, 400, base_rate=25.0,
+                                           surge_mult=6.0, surge_frac=0.25))
+        for agent in tr:
+            hi = agent > 3.0 * np.median(agent)
+            assert hi.sum() >= 80  # ~a quarter of the horizon is surging
+        # and the surge onsets differ per agent
+        onsets = [int(np.argmax(a > 3.0 * np.median(a))) for a in tr]
+        assert len(set(onsets)) > 1
+
+    def test_drift_ramps_monotonically_in_trend(self):
+        tr = np.asarray(drift_traces(KEY, 6, 400, start_rate=15.0,
+                                     end_rate=90.0))
+        thirds = tr.reshape(6, 4, 100).mean(axis=2)
+        assert (np.diff(thirds, axis=1) > 0).all()  # quarter means rise
+        assert (thirds[:, -1] / thirds[:, 0] > 2.0).all()
