@@ -1,9 +1,15 @@
 """Fig. 7b / §V-B2: federated-learning round latency.
 
 Measures (a) the real wall time of one Algorithm-1 aggregation + head
-fine-tune over an n-agent fleet on this host and (b) the modeled on-wire
+fine-tune over an n-agent fleet on this host, (b) the modeled on-wire
 round trip: agent payload (53 KB-class) over the paper's 5G links vs this
-framework's ICI all-reduce (the collective replaces the parameter server)."""
+framework's ICI all-reduce (the collective replaces the parameter server),
+and (c) the encoded per-round uplink payload per FL transport codec
+(``repro.fl``) — the concrete artifact row behind the paper's §VI
+"up to 10x less memory consumption" claim (the top-k codec's 8 B/kept
+coordinate is what crosses 10x; int8 is ~4x on the uplink alone and >=8x
+on the whole round once the broadcast downlink is counted — see
+benchmarks/fig_fl_comm.py)."""
 from __future__ import annotations
 
 import jax
@@ -11,17 +17,40 @@ import numpy as np
 
 from benchmarks.common import load_rows, save_rows, time_call
 from repro.configs.fcpo import FCPOConfig
-from repro.core.agent import param_bytes
+from repro.core.agent import agent_init, param_bytes
 from repro.core.fleet import fl_round, fleet_episode, fleet_init
 from repro.data.workload import fleet_traces
+from repro.fl import CODECS, TransportConfig, agent_payload_bytes
+
+
+def payload_rows():
+    """Measured encoded uplink bytes per client per round, per codec."""
+    cfg = FCPOConfig()
+    params = agent_init(cfg, jax.random.PRNGKey(0))
+    base = agent_payload_bytes(params, TransportConfig(codec="float32"))
+    rows = []
+    for codec in CODECS:
+        b = agent_payload_bytes(params, TransportConfig(codec=codec))
+        rows.append({
+            "name": f"fig7b_payload_{codec}",
+            "wall_us": 0.0,
+            "agents": 1,
+            "agent_kb": b / 1024,
+            "modeled_5g_ms": 2 * b * 8 / 10e6 * 1e3,
+            "modeled_ici_us": 2 * b / 50e9 * 1e6,
+            "uplink_bytes": b,
+            "uplink_reduction_vs_float32": base / b,
+        })
+    return rows
 
 
 def run(quick: bool = True):
     cached = load_rows("fig7b")
-    if cached:
+    # pre-transport caches lack the per-codec payload rows — re-measure
+    if cached and any(r["name"].startswith("fig7b_payload") for r in cached):
         return cached
     cfg = FCPOConfig(fl_every=1)
-    rows = []
+    rows = payload_rows()
     for n in (8, 32, 128):
         key = jax.random.PRNGKey(0)
         fleet = fleet_init(cfg, n, key, n_pods=max(1, n // 16))
@@ -48,11 +77,15 @@ def run(quick: bool = True):
 
 
 def main(quick: bool = True):
-    return [{
-        "name": r["name"], "us_per_call": f"{r['wall_us']:.0f}",
-        "derived": (f"agent={r['agent_kb']:.1f}KB 5G={r['modeled_5g_ms']:.0f}ms "
-                    f"ici={r['modeled_ici_us']:.1f}us"),
-    } for r in run(quick)]
+    out = []
+    for r in run(quick):
+        derived = (f"agent={r['agent_kb']:.1f}KB 5G={r['modeled_5g_ms']:.0f}ms "
+                   f"ici={r['modeled_ici_us']:.1f}us")
+        if "uplink_reduction_vs_float32" in r:
+            derived += f" reduction={r['uplink_reduction_vs_float32']:.1f}x"
+        out.append({"name": r["name"], "us_per_call": f"{r['wall_us']:.0f}",
+                    "derived": derived})
+    return out
 
 
 if __name__ == "__main__":

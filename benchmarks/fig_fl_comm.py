@@ -1,0 +1,256 @@
+"""FL communication benchmark: payload, parity, emergent stragglers.
+
+Three measurements over the federated transport subsystem (``repro.fl``):
+
+  * ``payload`` — encoded bytes per FL round per codec, from the same static
+    accounting the jitted round folds in as constants (uplink = one encoded
+    delta per selected client; downlink = per-agent full-parameter unicast
+    for the float32/parameter-server path vs ONE encoded base-delta
+    broadcast per pod for the compressed codecs — the delta codecs keep a
+    synchronized base on both ends, which is what makes the broadcast
+    legal). Acceptance: int8 reduces round payload >= 8x vs the float32
+    baseline (more for top-k) — the concrete artifact for the paper's §VI
+    10x-memory claim.
+  * ``parity`` — fleets with identical seeds trained through each codec on
+    identical traces; the lossy codecs' error-feedback residuals must keep
+    final fleet reward within 5% of the float32 baseline. The traced
+    per-round ``fl_payload_bytes`` from the training history is
+    cross-checked against the static accounting, and the int8 run must keep
+    the whole cadence ONE jitted scan (compile-once + no per-episode host
+    entry compiles — the structural gate).
+  * ``stragglers`` — bandwidth-scarcity sweep at a fixed round deadline:
+    scaling every agent's link down must monotonically raise the round-miss
+    rate (stragglers are *emergent* — payload bits / bandwidth vs deadline —
+    not coin flips).
+
+``--smoke --gate`` is the CI regression gate: asserts the >=8x int8
+reduction, reward parity, monotone miss rate, and the structural scan gate,
+and writes ``BENCH_fl_comm_smoke.json``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import load_rows, save_bench, save_rows
+from repro.configs.fcpo import FCPOConfig
+from repro.core.agent import agent_init
+from repro.core.fleet import _scan_fn, fleet_episode, fleet_init, train_fleet
+from repro.data.workload import fleet_traces
+from repro.fl import (CODECS, TransportConfig, agent_payload_bytes,
+                      downlink_bytes, full_param_bytes)
+
+PARITY_TOL = 0.05          # max relative final-reward drift vs float32
+SMOKE_PARITY_TOL = 0.10    # short smoke runs are noisier
+
+
+def _transport(codec, **kw):
+    return TransportConfig(codec=codec, **kw)
+
+
+def round_bytes(params_one, codec, n_agents, n_pods, topk_frac=0.05):
+    """Modeled bytes of one FL round: n_sel uplinks + the downlink."""
+    cfg = FCPOConfig()
+    t = _transport(codec, topk_frac=topk_frac)
+    up = agent_payload_bytes(params_one, t)
+    full = full_param_bytes(params_one)
+    n_sel = max(1, int(round(cfg.clients_per_round * n_agents)))
+    return n_sel * up + downlink_bytes(t, n_agents, n_pods, up, full), up
+
+
+def run_payload(n_agents=8, n_pods=1):
+    cfg = FCPOConfig()
+    params = agent_init(cfg, jax.random.PRNGKey(0))
+    base_total, _ = round_bytes(params, "float32", n_agents, n_pods)
+    rows = []
+    for codec in CODECS:
+        total, up = round_bytes(params, codec, n_agents, n_pods)
+        rows.append({
+            "name": f"fl_comm_payload_{codec}",
+            "us_per_call": 0.0,
+            "agents": n_agents,
+            "pods": n_pods,
+            "agent_uplink_bytes": up,
+            "round_bytes": total,
+            "reduction_vs_float32": base_total / total,
+        })
+    return rows
+
+
+def run_parity(n_agents=8, episodes=40, tail=10, seed=0):
+    """Train one fleet per codec on identical seeds/traces; compare final
+    reward. The int8 run doubles as the structural scan gate."""
+    cfg = FCPOConfig()
+    traces = fleet_traces(jax.random.PRNGKey(seed + 1), n_agents,
+                          episodes * cfg.n_steps)
+    rows, finals = [], {}
+    for codec in CODECS:
+        t = _transport(codec)
+        fleet = fleet_init(cfg, n_agents, jax.random.PRNGKey(seed))
+        ep_before = fleet_episode._cache_size()
+        fleet, hist = train_fleet(cfg, fleet, traces, transport=t)
+        host_compiles = fleet_episode._cache_size() - ep_before
+        # the compile-once rerun doubles the most expensive stage, and only
+        # the int8 row is asserted by the gate — measure it there alone
+        compiled_once = None
+        if codec == "int8":
+            size = _scan_fn(False)._cache_size()
+            fleet2 = fleet_init(cfg, n_agents, jax.random.PRNGKey(seed))
+            train_fleet(cfg, fleet2, traces, transport=t)
+            compiled_once = _scan_fn(False)._cache_size() == size
+
+        finals[codec] = float(np.mean(hist["reward"][-tail:]))
+        fl_eps = np.flatnonzero(hist["fl_payload_bytes"])
+        measured = float(hist["fl_payload_bytes"][fl_eps].mean())
+        params_one = jax.tree.map(lambda x: x[0], fleet.astate.params)
+        modeled, _ = round_bytes(params_one, codec, n_agents, 1)
+        rows.append({
+            "name": f"fl_comm_parity_{codec}",
+            "us_per_call": 0.0,
+            "agents": n_agents,
+            "episodes": episodes,
+            "final_reward": finals[codec],
+            "rel_vs_float32": finals[codec] / finals["float32"] - 1.0
+            if finals["float32"] else 0.0,
+            "payload_bytes_per_round": measured,
+            "payload_matches_model": bool(abs(measured - modeled)
+                                          < 1e-6 * max(modeled, 1.0) + 1.0),
+            "compiled_once": compiled_once,
+            "one_jitted_scan": host_compiles == 0,
+        })
+    return rows
+
+
+def run_stragglers(scales=(1.0, 0.5, 0.25, 0.125), deadline_s=0.02,
+                   n_agents=8, episodes=12, seed=0):
+    """Bandwidth-scarcity sweep: same fleet, links scaled down, fixed
+    deadline — the emergent round-miss rate must rise monotonically."""
+    cfg = FCPOConfig()
+    traces = fleet_traces(jax.random.PRNGKey(seed + 1), n_agents,
+                          episodes * cfg.n_steps)
+    # the s=1.0 baseline is whatever fleet_init actually assigns, so the
+    # sweep stays coupled to the links the parity fleets train over
+    base_bw = np.asarray(
+        fleet_init(cfg, n_agents, jax.random.PRNGKey(seed)).bandwidth)
+    t = _transport("float32", deadline_s=deadline_s)
+    rows = []
+    for s in scales:
+        fleet = fleet_init(cfg, n_agents, jax.random.PRNGKey(seed),
+                           bandwidth=np.asarray(base_bw * s))
+        _, hist = train_fleet(cfg, fleet, traces, transport=t)
+        fl_eps = np.flatnonzero(hist["fl_payload_bytes"])
+        miss = float(hist["fl_missed"][fl_eps].mean()) / n_agents
+        rows.append({
+            "name": f"fl_comm_stragglers_bw_x{s:g}",
+            "us_per_call": 0.0,
+            "agents": n_agents,
+            "bandwidth_scale": s,
+            "deadline_s": deadline_s,
+            "miss_rate": miss,
+        })
+    return rows
+
+
+def run(quick: bool = True, smoke: bool = False, fresh: bool = False):
+    """Raw benchmark rows. ``smoke``: tiny CI shapes, never cached.
+    ``fresh``: bypass the artifact cache (the gate must measure this run)."""
+    if smoke:
+        # payload accounting is static and instant — keep the headline A=8
+        # shape; only the training runs shrink.
+        return (run_payload()
+                + run_parity(n_agents=4, episodes=24, tail=8)
+                + run_stragglers(n_agents=4, episodes=8))
+    if not fresh:
+        cached = load_rows("fig_fl_comm")
+        if cached:
+            return cached
+    rows = (run_payload()
+            + run_parity(episodes=40 if quick else 100)
+            + run_stragglers(episodes=12 if quick else 40))
+    save_rows("fig_fl_comm", rows)
+    return rows
+
+
+def format_rows(rows):
+    out = []
+    for r in rows:
+        if "reduction_vs_float32" in r:
+            derived = (f"A={r['agents']} P={r['pods']} "
+                       f"uplink={r['agent_uplink_bytes'] / 1024:.2f}KB "
+                       f"round={r['round_bytes'] / 1024:.1f}KB "
+                       f"reduction={r['reduction_vs_float32']:.1f}x")
+        elif "final_reward" in r:
+            derived = (f"A={r['agents']} eps={r['episodes']} "
+                       f"reward={r['final_reward']:.3f} "
+                       f"rel={r['rel_vs_float32'] * 100:+.1f}% "
+                       f"payload/round={r['payload_bytes_per_round'] / 1024:.1f}KB "
+                       f"model_match={r['payload_matches_model']} "
+                       f"one_jitted_scan={r['one_jitted_scan']}")
+            if r["compiled_once"] is not None:
+                derived += f" compiled_once={r['compiled_once']}"
+        else:
+            derived = (f"A={r['agents']} bw_x{r['bandwidth_scale']:g} "
+                       f"deadline={r['deadline_s'] * 1e3:.0f}ms "
+                       f"miss_rate={r['miss_rate'] * 100:.0f}%")
+        out.append({"name": r["name"], "us_per_call": "0",
+                    "derived": derived})
+    return out
+
+
+def _run_and_save(quick: bool = True, smoke: bool = False,
+                  fresh: bool = False):
+    rows = run(quick, smoke=smoke, fresh=fresh)
+    save_bench("fl_comm" + ("_smoke" if smoke else ""), rows)
+    return rows
+
+
+def main(quick: bool = True, smoke: bool = False):
+    return format_rows(_run_and_save(quick, smoke=smoke))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit_csv
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI regression checks")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit nonzero unless int8 payload reduction >= 8x, "
+                         "lossy-codec reward parity holds, the miss rate is "
+                         "monotone in bandwidth scarcity, and the int8 run "
+                         "stayed one compiled scan (always re-measures)")
+    args = ap.parse_args()
+    raw = _run_and_save(smoke=args.smoke, fresh=args.gate)
+    emit_csv(format_rows(raw))
+    if args.gate:
+        by = {r["name"]: r for r in raw}
+        red = by["fl_comm_payload_int8"]["reduction_vs_float32"]
+        assert red >= 8.0, (
+            f"int8 round payload reduction {red:.2f}x < 8x — the delta "
+            f"codec or the downlink broadcast model regressed")
+        assert by["fl_comm_payload_topk"]["reduction_vs_float32"] > red, (
+            "top-k must compress harder than int8")
+        tol = SMOKE_PARITY_TOL if args.smoke else PARITY_TOL
+        for codec in ("int8", "topk"):
+            rel = by[f"fl_comm_parity_{codec}"]["rel_vs_float32"]
+            assert abs(rel) <= tol, (
+                f"{codec} final reward drifted {rel * 100:+.1f}% from the "
+                f"float32 baseline (tol {tol * 100:.0f}%) — error feedback "
+                f"is no longer keeping compressed FL convergent")
+            assert by[f"fl_comm_parity_{codec}"]["payload_matches_model"], (
+                f"{codec} traced fl_payload_bytes disagrees with the "
+                f"static accounting")
+        int8_row = by["fl_comm_parity_int8"]
+        assert int8_row["compiled_once"], (
+            "int8-codec scan recompiled on a same-shaped rerun — the "
+            "cadence is no longer one cached executable")
+        assert int8_row["one_jitted_scan"], (
+            "int8-codec run touched the per-episode host entry point — it "
+            "must run as ONE jitted scan")
+        misses = [r["miss_rate"] for r in raw
+                  if r["name"].startswith("fl_comm_stragglers")]
+        assert all(b >= a - 1e-9 for a, b in zip(misses, misses[1:])), (
+            f"round-miss rate {misses} not monotone in bandwidth scarcity — "
+            f"stragglers are no longer emergent from the uplink model")

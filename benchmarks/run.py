@@ -10,8 +10,8 @@ import traceback
 from benchmarks import (fig7_end2end, fig7b_fl_latency, fig8_learning,
                         fig9_slo, fig10_warmstart, fig11_overhead,
                         fig12_ablation_heads, fig13_crl, fig14_frl_scaling,
-                        fig_buffer_perf, fig_sim_fidelity, fig_twin_training,
-                        roofline)
+                        fig_buffer_perf, fig_fl_comm, fig_sim_fidelity,
+                        fig_twin_training, roofline)
 from benchmarks.common import emit_csv
 
 BENCHES = [
@@ -27,6 +27,7 @@ BENCHES = [
     ("fig_buffer_perf", fig_buffer_perf.main),
     ("fig_sim_fidelity", fig_sim_fidelity.main),
     ("fig_twin_training", fig_twin_training.main),
+    ("fig_fl_comm", fig_fl_comm.main),
     ("roofline", roofline.main),
 ]
 

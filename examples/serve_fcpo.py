@@ -58,7 +58,7 @@ def main():
         rates = traces[:, e * cfg.n_steps:(e + 1) * cfg.n_steps]
         fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates)
         if (e + 1) % cfg.fl_every == 0:
-            fleet, _ = fl_round(cfg, fleet, rollouts)
+            fleet, _, _ = fl_round(cfg, fleet, rollouts)
 
         # serve REAL batched requests at the agent's chosen configuration
         a = np.asarray(rollouts.actions[0, -1])

@@ -13,3 +13,4 @@ from repro.core.fleet import (Fleet, fl_round, fleet_episode, fleet_init,  # noq
                               fleet_shardings, train_fleet,
                               train_fleet_reference, train_fleet_scan)
 from repro.core.ppo import Rollout, agent_update, fcpo_loss, finetune_heads  # noqa: F401
+from repro.fl import TransportConfig  # noqa: F401

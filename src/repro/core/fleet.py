@@ -39,6 +39,10 @@ from repro.core.buffer import (buffer_diversity_mean, buffer_init,
 from repro.core.crl import AgentState, crl_episode
 from repro.core.ppo import agent_opt_init, finetune_heads
 from repro.distributed import sharding as shd
+from repro.fl import codec as fl_codec
+from repro.fl import staleness as fl_stale
+from repro.fl import transport as fl_transport
+from repro.fl.transport import DEFAULT_TRANSPORT, TransportConfig
 
 
 @jax.tree_util.register_pytree_node_class
@@ -47,11 +51,12 @@ class Fleet:
     (pytree aux data); everything else is traced leaves."""
 
     FIELDS = ("astate", "base_params", "env_params", "masks", "group_ids",
-              "pod_ids", "bandwidth", "speeds", "episode")
+              "pod_ids", "bandwidth", "speeds", "episode", "residuals",
+              "pending")
 
     def __init__(self, astate, base_params, env_params, masks, group_ids,
-                 pod_ids, bandwidth, speeds, episode, *, n_pods,
-                 group_counts):
+                 pod_ids, bandwidth, speeds, episode, residuals, pending, *,
+                 n_pods, group_counts):
         self.astate: AgentState = astate
         self.base_params = base_params
         self.env_params: env_mod.EnvParams = env_params
@@ -61,6 +66,12 @@ class Fleet:
         self.bandwidth = bandwidth
         self.speeds = speeds
         self.episode = episode
+        # FL transport state: per-agent error-feedback residuals of the
+        # lossy delta codec, and the staleness buffer of parked uploads —
+        # both live in the pytree so the whole transport path stays inside
+        # the donated scan (zero host work per round).
+        self.residuals = residuals
+        self.pending: fl_stale.PendingDeltas = pending
         self.n_pods: int = n_pods
         self.group_counts: Dict[str, int] = group_counts
 
@@ -153,6 +164,8 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
                         env_state=env_states, rng=rngs)
     fleet = Fleet(astate, base_params, env_params, masks, group_ids,
                   pod_ids, bandwidth, speeds, jnp.zeros((), jnp.int32),
+                  fl_codec.residuals_init(params),
+                  fl_stale.pending_init(params),
                   n_pods=n_pods, group_counts=group_counts)
     if mesh is not None:
         fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
@@ -172,15 +185,51 @@ def fleet_episode(cfg: FCPOConfig, fleet: Fleet, rates: jnp.ndarray,
     return fleet, rollouts, metrics
 
 
-@partial(jax.jit, static_argnums=0)
-def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None):
-    """One federated round: Eq. 7 selection -> Alg. 1 aggregation ->
-    Alg. 2 head fine-tuning. ``available`` masks out stragglers/offline
-    agents (fault tolerance)."""
+@partial(jax.jit, static_argnums=0, static_argnames=("transport",))
+def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
+             transport: Optional[TransportConfig] = None):
+    """One federated round: transport -> Eq. 7 selection -> Alg. 1
+    aggregation -> Alg. 2 head fine-tuning.
+
+    ``available`` masks out Bernoulli stragglers/offline agents (the legacy
+    fault-tolerance path). ``transport`` (jit-static) adds the communication
+    model on top: clients ship ``params - base`` deltas encoded per-leaf
+    with error feedback (``fleet.residuals``); a configured round deadline
+    makes stragglers *emergent* — an agent participates iff it is
+    Bernoulli-available AND its encoded upload fits the deadline — and with
+    ``async_rounds`` a missed upload parks in ``fleet.pending`` to join a
+    later round staleness-discounted. The default transport (float32 codec,
+    no deadline, sync) compiles to the exact pre-transport round.
+
+    Returns (fleet, sel, fl_metrics) where ``sel`` is the (A,) aggregation
+    mask and ``fl_metrics`` the per-round communication metrics
+    (``repro.fl.transport.FL_METRIC_KEYS``)."""
+    transport = DEFAULT_TRANSPORT if transport is None else transport
     a = fleet.pod_ids.shape[0]
     if available is None:
         available = jnp.ones((a,), bool)
+    legacy_avail = available
+    params = fleet.astate.params
+    pending = fleet.pending
 
+    # --- communication model: payload sizes are static, links are per-agent
+    up_bytes = fl_transport.agent_payload_bytes(params, transport,
+                                               stacked=True)
+    full_bytes = fl_transport.full_param_bytes(params, stacked=True)
+    down_bytes = fl_transport.downlink_bytes(transport, a, fleet.n_pods,
+                                             up_bytes, full_bytes)
+    uplink_s = fl_transport.uplink_seconds(up_bytes, fleet.bandwidth)
+    on_time = fl_transport.on_time_mask(uplink_s, transport.deadline_s)
+    fresh_ok = legacy_avail & on_time
+
+    # --- Eq. 7 selection. Sync rounds: a slow link emergently drops out of
+    # selection. Async rounds: slow-but-alive clients stay selectable (they
+    # park for the next round) and parked deltas are selectable even if
+    # their owner is offline now (the server already holds them).
+    if transport.async_rounds:
+        selectable = legacy_avail | pending.has
+    else:
+        selectable = fresh_ok
     div = buffer_diversity_mean(fleet.astate.buffer)
     stats = fed.ClientStats(
         mem_avail=jnp.clip(1.0 - fleet.astate.env_state.pre_q
@@ -188,16 +237,66 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None):
         compute_avail=jnp.clip(fleet.speeds / 2.0, 0, 1),
         diversity=div,
         bandwidth=fleet.bandwidth,
-        available=available,
+        available=selectable,
     )
     sel = fed.select_clients(cfg, stats)
 
     head_losses = jax.vmap(
         lambda p, r, m: fed.per_head_losses(cfg, p, r, m)
-    )(fleet.astate.params, rollouts, fleet.masks)
+    )(params, rollouts, fleet.masks)
+
+    # --- reconstruct the server-side view of each client's parameters
+    if transport.plain:
+        # lossless codec, nothing parked: base + (params - base) == params
+        # identically — skip the delta machinery so the default config is
+        # bit-for-bit the pre-transport program.
+        recon, sel_agg = params, sel
+        residuals, new_pending = fleet.residuals, pending
+        transmitted = sel
+        stale_used = jnp.zeros((), jnp.float32)
+    else:
+        base_g = jax.tree.map(lambda b: b[fleet.pod_ids], fleet.base_params)
+        delta = jax.tree.map(jnp.subtract, params, base_g)
+        decoded, res_next = fl_codec.codec_roundtrip(delta, fleet.residuals,
+                                                     transport)
+        if transport.async_rounds:
+            w_stale = fl_stale.stale_weights(pending,
+                                             transport.staleness_decay)
+            contrib = fl_stale.merge_contributions(decoded, pending,
+                                                   fresh_ok, w_stale)
+            sel_agg = sel & (fresh_ok | pending.has)
+            parked = sel & legacy_avail & ~on_time
+            consumed = sel & pending.has & ~fresh_ok
+            fresh_sent = sel & fresh_ok
+            transmitted = fresh_sent | parked
+            new_pending = fl_stale.update_pending(pending, decoded, parked,
+                                                  consumed, fresh_sent)
+            stale_used = jnp.sum(consumed).astype(jnp.float32)
+        else:
+            contrib = decoded
+            sel_agg = sel            # selection already required on-time
+            transmitted = sel
+            new_pending = pending
+            stale_used = jnp.zeros((), jnp.float32)
+        # only selected contributors are seen through the wire; everyone
+        # else enters aggregation with their TRUE params, so Alg. 1's
+        # no-contributor fallback ("groups with no contributor keep the
+        # agent's own head") keeps real heads, not a lossy reconstruction
+        # whose error feedback was never committed.
+        recon = jax.tree.map(
+            lambda rc, p: jnp.where(
+                sel_agg.reshape((-1,) + (1,) * (rc.ndim - 1)), rc, p),
+            jax.tree.map(jnp.add, base_g, contrib), params)
+        # error feedback commits only for deltas that actually went (or
+        # will go, parked) over the wire; everyone else re-derives a fresh
+        # delta against the moved base next round.
+        residuals = jax.tree.map(
+            lambda nr, r: jnp.where(
+                transmitted.reshape((-1,) + (1,) * (nr.ndim - 1)), nr, r),
+            res_next, fleet.residuals)
 
     new_params, new_base = fed.aggregate(
-        cfg, fleet.astate.params, fleet.base_params, sel, head_losses,
+        cfg, recon, fleet.base_params, sel_agg, head_losses,
         fleet.head_groups, fleet.pod_ids, fleet.n_pods)
 
     # Algorithm 2: local action-head fine-tuning on local experiences
@@ -209,7 +308,18 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None):
     # streaming moments from their slots, bounding rank-1 float32 drift.
     buffers = jax.vmap(buffer_resync)(fleet.astate.buffer)
     astate = fleet.astate._replace(params=params, opt=opt, buffer=buffers)
-    return fleet._replace(astate=astate, base_params=new_base), sel
+
+    n_up = jnp.sum(transmitted).astype(jnp.float32)
+    fl_metrics = {
+        "fl_payload_bytes": n_up * up_bytes + down_bytes,
+        "fl_uplink_s": jnp.sum(jnp.where(transmitted, uplink_s, 0.0))
+        / jnp.maximum(n_up, 1.0),
+        "fl_missed": jnp.sum(legacy_avail & ~on_time).astype(jnp.float32),
+        "fl_stale_used": stale_used,
+    }
+    fleet = fleet._replace(astate=astate, base_params=new_base,
+                           residuals=residuals, pending=new_pending)
+    return fleet, sel_agg, fl_metrics
 
 
 @partial(jax.jit, static_argnums=0)
@@ -221,11 +331,13 @@ def pod_merge(cfg: FCPOConfig, fleet: Fleet):
 def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                           learn: bool = True, federated: bool = True,
                           straggler_prob: float = 0.0, seed: int = 0,
-                          env_backend=None):
+                          env_backend=None,
+                          transport: Optional[TransportConfig] = None):
     """The original Python-loop driver: one host dispatch per episode plus a
     per-metric host sync — O(n_episodes) dispatches. Kept as the equivalence
     oracle for ``train_fleet_scan`` (same seeds => same straggler draws)."""
     backend = get_backend(env_backend)
+    transport = DEFAULT_TRANSPORT if transport is None else transport
     a, total = traces.shape
     n_eps = total // cfg.n_steps
     rng = np.random.default_rng(seed)
@@ -235,13 +347,15 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
         rates = traces[:, e * cfg.n_steps:(e + 1) * cfg.n_steps]
         fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates,
                                                  learn=learn, backend=backend)
+        fl_metrics = fl_transport.fl_zero_metrics()
         if federated and learn and (e + 1) % cfg.fl_every == 0:
             avail = jnp.asarray(rng.random(a) >= straggler_prob)
-            fleet, _ = fl_round(cfg, fleet, rollouts, avail)
+            fleet, _, fl_metrics = fl_round(cfg, fleet, rollouts, avail,
+                                            transport=transport)
             rounds += 1
             if rounds % cfg.hierarchical_period == 0 and fleet.n_pods > 1:
                 fleet = pod_merge(cfg, fleet)
-        for k, v in metrics.items():
+        for k, v in {**metrics, **fl_metrics}.items():
             history.setdefault(k, []).append(np.asarray(v).mean())
     return fleet, {k: np.asarray(v) for k, v in history.items()}
 
@@ -252,7 +366,7 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
 # ---------------------------------------------------------------------------
 def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
                  avail: jnp.ndarray, do_fl: jnp.ndarray, learn: bool,
-                 backend: EnvBackend):
+                 backend: EnvBackend, transport: TransportConfig):
     """Scan body host fn. rates_eps: (n_eps, A, n_steps); avail/do_fl:
     pre-drawn availability bits and FL schedule, consumed as scan xs."""
 
@@ -264,15 +378,19 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
 
         def with_fl(op):
             f, rnd = op
-            f, _ = fl_round(cfg, f, rollouts, av)
+            f, _, flm = fl_round(cfg, f, rollouts, av, transport=transport)
             rnd = rnd + 1
             if f.n_pods > 1:
                 f = jax.lax.cond(rnd % cfg.hierarchical_period == 0,
                                  lambda g: pod_merge(cfg, g), lambda g: g, f)
-            return f, rnd
+            return (f, rnd), flm
 
-        flt, rounds = jax.lax.cond(fl, with_fl, lambda op: op, (flt, rounds))
+        def no_fl(op):
+            return op, fl_transport.fl_zero_metrics()
+
+        (flt, rounds), flm = jax.lax.cond(fl, with_fl, no_fl, (flt, rounds))
         ep_metrics = {k: v.mean() for k, v in metrics.items()}
+        ep_metrics.update(flm)
         return (flt, rounds), ep_metrics
 
     (fleet, _), history = jax.lax.scan(
@@ -285,7 +403,7 @@ _SCAN_FNS: Dict[bool, Any] = {}
 
 def _scan_fn(donate: bool):
     if donate not in _SCAN_FNS:
-        kw = dict(static_argnums=(0, 5, 6))
+        kw = dict(static_argnums=(0, 5, 6, 7))
         if donate:
             kw["donate_argnums"] = (1,)
         _SCAN_FNS[donate] = jax.jit(_scan_driver, **kw)
@@ -296,7 +414,8 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                      learn: bool = True, federated: bool = True,
                      straggler_prob: float = 0.0, seed: int = 0,
                      mesh=None, donate: Optional[bool] = None,
-                     env_backend=None):
+                     env_backend=None,
+                     transport: Optional[TransportConfig] = None):
     """Scanned fleet driver: episodes over ``traces`` (A, total_steps), FL
     every ``fl_every`` episodes (stragglers masked by pre-drawn availability
     bits), cross-pod merge every ``hierarchical_period`` rounds — all inside
@@ -309,9 +428,16 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     ``env_backend``: ``"fluid"`` / ``"twin"`` / an ``EnvBackend`` — with the
     twin, every control interval nests K data-plane microticks *inside* the
     same single scan (no host Python per microtick; ``fleet`` must have been
-    built with the same backend). Returns (fleet, history) with history as
+    built with the same backend).
+    ``transport``: a jit-static ``repro.fl.TransportConfig`` — delta codec,
+    round deadline (emergent stragglers compose with the Bernoulli
+    ``straggler_prob`` mask), and async staleness semantics; the per-round
+    communication metrics (``fl_payload_bytes``/``fl_uplink_s``/
+    ``fl_missed``/``fl_stale_used``) appear in the history, zero on
+    episodes without a round. Returns (fleet, history) with history as
     per-episode numpy arrays, fetched in a single device->host transfer."""
     backend = get_backend(env_backend)
+    transport = DEFAULT_TRANSPORT if transport is None else transport
     a, total = traces.shape
     n_eps = total // cfg.n_steps
     schedule = fed.fl_schedule(cfg, n_eps, federated=federated, learn=learn)
@@ -331,18 +457,19 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     if donate is None:
         donate = jax.default_backend() != "cpu"
     fleet, history = _scan_fn(bool(donate))(
-        cfg, fleet, rates_eps, avail, do_fl, learn, backend)
+        cfg, fleet, rates_eps, avail, do_fl, learn, backend, transport)
     return fleet, jax.device_get(history)
 
 
 def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                 learn: bool = True, federated: bool = True,
                 straggler_prob: float = 0.0, seed: int = 0,
-                env_backend=None):
+                env_backend=None, transport: Optional[TransportConfig] = None):
     """Compatibility entry point — delegates to the scanned driver. Buffer
     donation stays off so callers may keep using the input fleet (forking a
     fleet into warm/cold copies is a common pattern in the benchmarks)."""
     return train_fleet_scan(cfg, fleet, traces, learn=learn,
                             federated=federated,
                             straggler_prob=straggler_prob, seed=seed,
-                            donate=False, env_backend=env_backend)
+                            donate=False, env_backend=env_backend,
+                            transport=transport)

@@ -1,0 +1,24 @@
+"""Federated transport subsystem: compressed, communication-aware,
+staleness-tolerant FL rounds.
+
+Makes FL communication a first-class, simulated part of every round of the
+scanned fleet driver: clients transmit ``params - base`` deltas encoded
+per-leaf (float32 / int8 / top-k, jit-static) with error-feedback residuals
+carried in the Fleet pytree (``repro.fl.codec``); uplink time = encoded
+payload bits / per-agent bandwidth against a configurable round deadline,
+so stragglers are *emergent* (``repro.fl.transport``); and a missed
+deadline can park the delta for a staleness-discounted join next round
+(``repro.fl.staleness``). Wired through ``core.fleet.fl_round`` /
+``train_fleet_scan`` — the whole cadence stays ONE jitted donated scan —
+and benchmarked by ``benchmarks/fig_fl_comm.py``.
+"""
+from repro.fl.codec import codec_roundtrip, residuals_init  # noqa: F401
+from repro.fl.staleness import (PendingDeltas, merge_contributions,  # noqa: F401
+                                pending_init, stale_weights,
+                                update_pending)
+from repro.fl.transport import (CODECS, DEFAULT_TRANSPORT,  # noqa: F401
+                                FL_METRIC_KEYS, TransportConfig,
+                                agent_payload_bytes, downlink_bytes,
+                                fl_zero_metrics, full_param_bytes,
+                                leaf_payload_bytes, on_time_mask, topk_k,
+                                uplink_seconds)

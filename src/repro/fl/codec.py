@@ -1,0 +1,57 @@
+"""Per-leaf delta codec over stacked fleet pytrees.
+
+Clients transmit ``params - base`` deltas, encoded per-leaf with a
+jit-static codec choice and per-agent error-feedback residuals: the
+residual of every lossy round is carried in the Fleet pytree
+(``fleet.residuals``) and added back before the next encode, which keeps
+the *cumulative* transmitted delta unbiased (the telescoping identity
+``Σ decoded_t + r_N == Σ delta_t + r_0`` holds to float roundoff per round,
+bit-exact for topk — property-tested in tests/test_properties.py).
+
+The per-coordinate math lives ONCE in ``repro.kernels.ref``
+(``delta_codec_step`` / ``delta_codec_ref``); this module only reshapes
+stacked (A, ...) leaves to flat (A, L) vectors and routes them through the
+jnp oracle (default) or the fused Pallas ``delta_codec`` kernel
+(``TransportConfig.use_pallas`` — bit-identical, interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.transport import TransportConfig, topk_k
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def codec_roundtrip(delta, residual, transport: TransportConfig):
+    """Encode->decode a fleet's deltas with error feedback.
+
+    delta, residual: matching pytrees of stacked (A, ...) float32 leaves.
+    Returns (decoded, new_residual) pytrees of the same structure, with
+    ``decoded + new_residual == delta + residual`` per leaf (to float
+    roundoff; bit-exact for float32/topk)."""
+    def one(d, r):
+        a = d.shape[0]
+        df = d.reshape(a, -1).astype(jnp.float32)
+        rf = r.reshape(a, -1).astype(jnp.float32)
+        k = topk_k(df.shape[1], transport.topk_frac)
+        if transport.use_pallas:
+            dec, nr = kops.delta_codec(df, rf, codec=transport.codec, k=k)
+        else:
+            dec, nr = jax.vmap(lambda x, y: kref.delta_codec_ref(
+                x, y, codec=transport.codec, k=k))(df, rf)
+        return dec.reshape(d.shape), nr.reshape(d.shape)
+
+    # flatten/unflatten instead of an isinstance(tuple) is_leaf split so any
+    # interior tuple/NamedTuple node in the params tree stays intact
+    leaves_d, treedef = jax.tree.flatten(delta)
+    pairs = [one(d, r) for d, r in zip(leaves_d, jax.tree.leaves(residual))]
+    return (jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree.unflatten(treedef, [p[1] for p in pairs]))
+
+
+def residuals_init(params):
+    """Zero error-feedback residuals matching a (stacked) params pytree."""
+    return jax.tree.map(lambda p: jnp.zeros(jnp.shape(p), jnp.float32),
+                        params)

@@ -1,0 +1,91 @@
+"""Staleness-tolerant (async-FL) round semantics.
+
+With a round deadline but *sync* rounds, a slow client simply drops out of
+Eq. 7 selection — its work is wasted. Async rounds instead let the upload
+finish late: a selected client that misses the deadline **parks** its
+encoded delta in a server-side pending buffer (``fleet.pending``, a Fleet
+pytree field — zero host work, lives inside the donated scan) and joins a
+later round with a staleness-discounted weight
+``staleness_decay ** staleness`` (FedAsync-style: the discounted delta is
+folded into Algorithm 1 as a shrunk client contribution
+``base + w · delta``, so the aggregation code itself is unchanged).
+
+Bookkeeping per round (all masks are (A,) bool, resolved inside jit):
+
+* ``fresh_sent`` — selected, Bernoulli-available AND on time: its fresh
+  decoded delta actually crossed the wire, so any pending delta it still
+  had is *superseded* (dropped — the upload carries strictly newer
+  information).
+* ``parked``     — selected, available, missed the deadline: its decoded
+  delta (error feedback already applied) is parked with staleness 1.
+* ``consumed``   — selected with a pending delta and no fresh arrival: the
+  parked delta is used, discounted, and cleared.
+* otherwise a pending delta ages: staleness += 1 — including when its
+  owner is online and on time but simply lost Eq. 7 selection (nothing
+  was uploaded, so there is nothing newer to supersede it).
+
+A parked delta is expressed against the base network at park time; by
+consumption the base has moved one-or-more aggregation steps — the
+staleness discount is exactly the async-FL damping that keeps that drift
+bounded.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PendingDeltas(NamedTuple):
+    """Server-side parked uploads, stacked over the agent axis."""
+    delta: Any               # pytree like params, (A, ...) decoded deltas
+    staleness: jnp.ndarray   # (A,) int32 — rounds the delta has waited
+    has: jnp.ndarray         # (A,) bool — a delta is parked
+
+
+def pending_init(params) -> PendingDeltas:
+    a = jnp.shape(jax.tree.leaves(params)[0])[0]
+    return PendingDeltas(
+        delta=jax.tree.map(lambda p: jnp.zeros(jnp.shape(p), jnp.float32),
+                           params),
+        staleness=jnp.zeros((a,), jnp.int32),
+        has=jnp.zeros((a,), bool),
+    )
+
+
+def _bmask(m, leaf):
+    return m.reshape(m.shape + (1,) * (leaf.ndim - 1))
+
+
+def stale_weights(pending: PendingDeltas, decay: float) -> jnp.ndarray:
+    """(A,) discount applied to a parked delta when it is consumed."""
+    return jnp.asarray(decay, jnp.float32) ** pending.staleness
+
+
+def merge_contributions(decoded, pending: PendingDeltas, fresh_ok,
+                        w_stale):
+    """Per-agent round contribution: the fresh decoded delta where it
+    arrived, else the staleness-discounted parked delta."""
+    return jax.tree.map(
+        lambda d, p: jnp.where(_bmask(fresh_ok, d), d,
+                               _bmask(w_stale, p) * p),
+        decoded, pending.delta)
+
+
+def update_pending(pending: PendingDeltas, decoded, parked, consumed,
+                   fresh_sent) -> PendingDeltas:
+    """Advance the pending buffer past one round (see module docstring).
+    ``fresh_sent`` = selected AND on time — only an upload that actually
+    happened supersedes a parked delta; an on-time owner that merely lost
+    selection keeps (and ages) its pending delta."""
+    kept = pending.has & ~consumed & ~fresh_sent
+    return PendingDeltas(
+        delta=jax.tree.map(
+            lambda d, p: jnp.where(_bmask(parked, d), d, p),
+            decoded, pending.delta),
+        staleness=jnp.where(parked, 1,
+                            jnp.where(kept, pending.staleness + 1, 0)
+                            ).astype(jnp.int32),
+        has=parked | kept,
+    )

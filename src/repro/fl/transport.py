@@ -1,0 +1,163 @@
+"""FL communication model: payload accounting, uplink times, round deadlines.
+
+The pre-transport repo modeled FL communication as free — ``fed.aggregate``
+read every client's full float32 parameters as if they had teleported to the
+server, and stragglers were Bernoulli draws unrelated to any device
+property. This module makes the wire explicit:
+
+* **Payload accounting** — per-leaf encoded sizes for the three codecs
+  (``repro.kernels.ref.DELTA_CODECS``): float32 (4 B/param), int8
+  (1 B/param + one float32 scale per tensor), top-k (8 B per kept
+  coordinate: float32 value + int32 index). Sizes are static given the
+  codec and the parameter shapes, so they fold into the jitted round as
+  constants.
+* **Uplink model** — a client's upload takes ``payload_bits /
+  bandwidth`` seconds against its per-agent link (``fleet.bandwidth``,
+  Mbit/s). With a round deadline configured, a slow link *emergently*
+  misses the round — it drops out of Eq. 7 selection (or, async mode,
+  parks its delta: ``repro.fl.staleness``) — instead of being a coin flip.
+  The legacy ``--straggler-prob`` Bernoulli mask composes on top: an agent
+  participates iff it is Bernoulli-available AND on time.
+* **Downlink model** — the float32 codec is the pre-transport
+  parameter-server semantics (nothing tracks a shared base, so the server
+  unicasts full fresh float32 parameters to every agent: A messages). The
+  compressed codecs maintain a synchronized per-pod base network on both
+  ends by construction, which is exactly what enables the downlink to be
+  ONE encoded base-delta broadcast per pod (P messages; the per-group head
+  deltas ride in the same envelope and are a small constant factor). This
+  asymmetry is the systems payoff of delta coding and is what the
+  ``fig_fl_comm`` ≥8× int8 round-payload reduction measures.
+
+``TransportConfig`` is a frozen (hashable) dataclass so it threads through
+``fl_round`` / ``train_fleet_scan`` as a jit-static argument; the default
+config (float32 codec, no deadline, sync rounds) compiles to the exact
+pre-transport program, reproducing earlier training runs seed-for-seed.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import DELTA_CODECS
+
+CODECS = DELTA_CODECS
+
+
+@dataclass(frozen=True)
+class TransportConfig:
+    """Jit-static description of one FL round's communication path.
+
+    codec: on-wire delta encoding (``float32`` is lossless = the legacy
+    path). topk_frac: fraction of coordinates kept per tensor by the top-k
+    codec. deadline_s: round deadline in seconds; <= 0 disables the
+    deadline (every upload makes it). async_rounds: staleness-tolerant
+    semantics — a selected client that misses the deadline parks its
+    encoded delta and joins the next round discounted by
+    ``staleness_decay ** staleness``. use_pallas: route the codec through
+    the fused Pallas ``delta_codec`` kernel instead of the jnp oracle."""
+    codec: str = "float32"
+    topk_frac: float = 0.05
+    deadline_s: float = 0.0
+    async_rounds: bool = False
+    staleness_decay: float = 0.5
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; expected one "
+                             f"of {CODECS}")
+        if not (0.0 < self.topk_frac <= 1.0):
+            raise ValueError("topk_frac must be in (0, 1]")
+
+    @property
+    def plain(self) -> bool:
+        """True when the round is semantically the legacy path: lossless
+        codec and no parked deltas, so the server reconstruction
+        ``base + decode(encode(params - base))`` is *identically* ``params``
+        and the whole delta machinery is skipped (bit-for-bit pre-transport
+        aggregation; a deadline may still shrink the selection)."""
+        return self.codec == "float32" and not self.async_rounds
+
+
+DEFAULT_TRANSPORT = TransportConfig()
+
+
+# ---------------------------------------------------------------------------
+# Payload accounting (static)
+# ---------------------------------------------------------------------------
+def topk_k(size: int, frac: float) -> int:
+    """Per-tensor top-k budget: ceil(frac * size), at least 1."""
+    return max(1, int(math.ceil(frac * size)))
+
+
+def leaf_payload_bytes(size: int, codec: str, topk_frac: float) -> float:
+    if codec == "float32":
+        return 4.0 * size
+    if codec == "int8":
+        return float(size) + 4.0          # int8 values + one float32 scale
+    if codec == "topk":
+        return 8.0 * topk_k(size, topk_frac)   # float32 value + int32 index
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def _leaf_sizes(params, stacked: bool):
+    return [int(math.prod(jnp.shape(p)[1:]) if stacked
+                else math.prod(jnp.shape(p)))
+            for p in jax.tree.leaves(params)]
+
+
+def agent_payload_bytes(params, transport: TransportConfig, *,
+                        stacked: bool = False) -> float:
+    """Encoded uplink bytes for ONE agent's delta under ``transport``.
+    ``stacked=True`` when ``params`` carries a leading agent axis."""
+    return sum(leaf_payload_bytes(s, transport.codec, transport.topk_frac)
+               for s in _leaf_sizes(params, stacked))
+
+
+def full_param_bytes(params, *, stacked: bool = False) -> float:
+    """Raw float32 size of one agent's parameters (the downlink unit for
+    the legacy/float32 parameter-server path)."""
+    return 4.0 * sum(_leaf_sizes(params, stacked))
+
+
+def downlink_bytes(transport: TransportConfig, n_agents: int, n_pods: int,
+                   up_bytes: float, full_bytes: float) -> float:
+    """Server->client bytes per round. float32 codec: per-agent unicast of
+    full fresh parameters (pre-transport parameter-server semantics).
+    Compressed codecs: one encoded base-delta broadcast per pod."""
+    if transport.codec == "float32":
+        return n_agents * full_bytes
+    return n_pods * up_bytes
+
+
+# ---------------------------------------------------------------------------
+# Uplink / deadline model (traced)
+# ---------------------------------------------------------------------------
+def uplink_seconds(payload_bytes: float, bandwidth_mbps) -> jnp.ndarray:
+    """(A,) upload time of one encoded delta over each agent's link."""
+    return payload_bytes * 8.0 / (jnp.maximum(bandwidth_mbps, 1e-6) * 1e6)
+
+
+def on_time_mask(uplink_s, deadline_s: float) -> jnp.ndarray:
+    """(A,) bool: upload fits inside the round deadline. ``deadline_s <= 0``
+    disables the deadline (static branch — no compute in the jitted round)."""
+    if deadline_s <= 0:
+        return jnp.ones(uplink_s.shape, bool)
+    return uplink_s <= deadline_s
+
+
+# ---------------------------------------------------------------------------
+# Per-round metrics surfaced into the training history
+# ---------------------------------------------------------------------------
+FL_METRIC_KEYS = ("fl_payload_bytes", "fl_uplink_s", "fl_missed",
+                  "fl_stale_used")
+
+
+def fl_zero_metrics() -> Dict[str, jnp.ndarray]:
+    """The all-zeros FL metric dict emitted on episodes without a round
+    (both drivers emit the same structure so histories stay comparable)."""
+    return {k: jnp.zeros((), jnp.float32) for k in FL_METRIC_KEYS}

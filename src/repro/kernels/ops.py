@@ -15,6 +15,7 @@ import os
 import jax
 
 from repro.kernels import decode_attention as _dec
+from repro.kernels import delta_codec as _codec
 from repro.kernels import diversity as _div
 from repro.kernels import flash_attention as _fa
 from repro.kernels import packing as _pack
@@ -56,6 +57,16 @@ def diversity_insert(states, probs, score, filled, s_sum, s_outer, p_sum,
                                  s_outer, p_sum, n_filled, cand_states,
                                  cand_probs, alpha=alpha, beta=beta,
                                  ridge=ridge, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "k"))
+def delta_codec(delta, residual, *, codec, k=1):
+    """Fused FL transport codec (error feedback + encode + decode): one
+    kernel call per fleet turns the flat (A, L) parameter deltas into their
+    lossy on-wire round trip plus the carried residuals. Oracle:
+    ``repro.kernels.ref.delta_codec_ref``."""
+    return _codec.delta_codec(delta, residual, codec=codec, k=k,
+                              interpret=_interpret_default())
 
 
 @jax.jit

@@ -152,6 +152,105 @@ def diversity_insert_step(states, probs, score, filled, s_sum, s_outer,
 
 
 # ---------------------------------------------------------------------------
+# Federated delta codec (fl transport) — shared math + jnp oracle
+# ---------------------------------------------------------------------------
+# Single source of truth for every int8/top-k encode/decode in the repo: the
+# FL transport subsystem (``repro.fl.codec``), the DP gradient compression
+# (``repro.training.compression`` re-exports ``quantize_int8`` /
+# ``dequantize_int8`` from here), the jnp oracle (``delta_codec_ref``), and
+# the fused Pallas ``delta_codec`` kernel body all call these helpers, so the
+# implementations cannot drift. Everything is plain vector ops (no gather-
+# heavy argsort) so the same code is legal inside jit, vmap, lax.scan, and a
+# Pallas kernel.
+
+DELTA_CODECS = ("float32", "int8", "topk")
+
+
+def int8_scale(xf):
+    """Per-tensor symmetric int8 scale: max|x|/127, floored away from 0.
+
+    Written as an explicit multiply by the reciprocal constant: XLA applies
+    the div-by-constant -> mul-by-reciprocal rewrite in some compilation
+    contexts (e.g. inside a Pallas kernel) but not others, which would put
+    the kernel and the op-by-op oracle one ulp apart on the scale and break
+    bit-identity everywhere downstream."""
+    return jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) * (1.0 / 127.0)
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = int8_scale(xf)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_roundtrip(xf):
+    """quantize -> dequantize without materializing the int8 array (the
+    values stay integer-valued float32, bit-identical to casting through
+    int8 — asserted in tests/test_fl.py). Returns (decoded, scale)."""
+    scale = int8_scale(xf)
+    return jnp.clip(jnp.round(xf / scale), -127.0, 127.0) * scale, scale
+
+
+def topk_mask(mag, k: int):
+    """(n,) bool mask selecting EXACTLY the k largest-magnitude entries,
+    ties broken by lowest index. Sort + cumsum only — no argsort scatter —
+    so the same code runs inside the Pallas kernel body."""
+    n = mag.shape[0]
+    if k >= n:
+        return jnp.ones((n,), bool)
+    thresh = jnp.sort(mag)[n - k]                 # k-th largest value
+    above = mag > thresh
+    n_above = jnp.sum(above.astype(jnp.int32))
+    eq = mag == thresh
+    take_eq = eq & (jnp.cumsum(eq.astype(jnp.int32)) <= k - n_above)
+    return above | take_eq
+
+
+def delta_codec_step(xf, *, codec: str, k: int = 1):
+    """Encode->decode one flat error-compensated delta ``xf = delta + r``.
+
+    Returns (decoded, new_residual) with ``decoded + new_residual == xf``
+    — the telescoping identity error feedback relies on; bit-exact for
+    float32/topk, within one ulp of the quantization scale for int8:
+      * ``float32`` — lossless: decoded = xf, residual 0.
+      * ``int8``    — per-tensor symmetric quantization round trip.
+      * ``topk``    — keep the k largest-|.| coordinates exactly, zero the
+        rest; the untransmitted mass is the residual.
+    """
+    if codec == "float32":
+        return xf, jnp.zeros_like(xf)
+    if codec == "int8":
+        # The residual is (frac - q) * scale, NOT xf - q*scale: the latter
+        # is an FMA-contractible a*b-c pattern that XLA fuses inside the
+        # Pallas kernel but not in the op-by-op oracle, breaking
+        # kernel==oracle bit-identity. (frac - q)*scale has the subtract
+        # before the multiply — no contraction applies — and equals
+        # xf - dec to one ulp of xf (frac*scale == xf up to two roundings).
+        scale = int8_scale(xf)
+        frac = xf / scale
+        q = jnp.clip(jnp.round(frac), -127.0, 127.0)
+        return q * scale, (frac - q) * scale
+    if codec == "topk":
+        mask = topk_mask(jnp.abs(xf), k)
+        # residual via select, not subtraction: exact in both regimes
+        return jnp.where(mask, xf, 0.0), jnp.where(mask, 0.0, xf)
+    raise ValueError(f"unknown codec {codec!r}; expected one of {DELTA_CODECS}")
+
+
+def delta_codec_ref(delta, residual, *, codec: str, k: int = 1):
+    """jnp oracle for the fused Pallas ``delta_codec`` kernel: one agent's
+    flat (L,) parameter delta through error feedback + encode + decode
+    (vmap for a fleet). Returns (decoded, new_residual)."""
+    return delta_codec_step(delta + residual, codec=codec, k=k)
+
+
+# ---------------------------------------------------------------------------
 # Request-level data-plane microtick (digital twin) — shared math + jnp oracle
 # ---------------------------------------------------------------------------
 # The twin keeps each agent's in-flight requests in a power-of-two ring whose

@@ -86,7 +86,7 @@ def main(argv=None):
         rates = traces[:, e * cfg_f.n_steps:(e + 1) * cfg_f.n_steps]
         fleet, rollouts, metrics = fleet_episode(cfg_f, fleet, rates)
         if (e + 1) % cfg_f.fl_every == 0:
-            fleet, sel = fl_round(cfg_f, fleet, rollouts)
+            fleet, sel, _ = fl_round(cfg_f, fleet, rollouts)
         # serve one real batch at the fleet's current best configuration
         a = np.asarray(rollouts.actions[0, -1])
         bs = cfg_f.bs_values[int(a[1])]

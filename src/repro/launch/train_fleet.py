@@ -17,7 +17,14 @@ Examples:
       --env-backend twin --scenario switching    # train in the twin
   PYTHONPATH=src python -m repro.launch.train_fleet --agents 16 --episodes 100 \
       --straggler-prob 0.3 --driver reference   # O(n_episodes) dispatches
+  PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --episodes 100 \
+      --fl-codec int8 --fl-deadline-s 0.02 --fl-async  # compressed async FL
   PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --mesh debug
+
+``--fl-codec/--fl-deadline-s/--fl-async`` configure the federated transport
+subsystem (``repro.fl``): compressed ``params - base`` deltas with error
+feedback, uplink-time round deadlines (emergent stragglers), and
+staleness-tolerant async rounds — all inside the same single jitted scan.
 """
 from __future__ import annotations
 
@@ -25,11 +32,13 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.configs.fcpo import FCPOConfig
 from repro.core.backends import BACKENDS, get_backend
 from repro.core.fleet import (fleet_init, train_fleet_reference,
                               train_fleet_scan)
+from repro.fl import CODECS, TransportConfig
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.sim import SCENARIOS, SimParams, make_scenario
 
@@ -41,7 +50,31 @@ def main(argv=None):
     ap.add_argument("--episodes", type=int, default=200)
     ap.add_argument("--fl-every", type=int, default=None,
                     help="override cfg.fl_every")
-    ap.add_argument("--straggler-prob", type=float, default=0.0)
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="probability an agent is offline for an FL round "
+                         "(Bernoulli draw, the legacy straggler model). "
+                         "Composes with the EMERGENT deadline stragglers of "
+                         "--fl-deadline-s: an agent joins a round only if it "
+                         "is Bernoulli-available AND its encoded upload fits "
+                         "the deadline over its own link")
+    ap.add_argument("--fl-codec", choices=CODECS, default="float32",
+                    help="on-wire FL delta codec (repro.fl): float32 is the "
+                         "lossless legacy path; int8/topk compress the "
+                         "params-base delta with error feedback")
+    ap.add_argument("--fl-topk-frac", type=float, default=0.05,
+                    help="fraction of coordinates the topk codec keeps per "
+                         "tensor")
+    ap.add_argument("--fl-deadline-s", type=float, default=0.0,
+                    help="FL round deadline (s); uplink time = encoded "
+                         "payload bits / per-agent bandwidth, so slow links "
+                         "emergently miss rounds. <= 0 disables")
+    ap.add_argument("--fl-async", action="store_true",
+                    help="staleness-tolerant rounds: a selected client that "
+                         "misses the deadline parks its encoded delta and "
+                         "joins the next round staleness-discounted")
+    ap.add_argument("--fl-pallas", action="store_true",
+                    help="route the delta codec through the fused Pallas "
+                         "delta_codec kernel")
     ap.add_argument("--no-federated", action="store_true")
     ap.add_argument("--no-learn", action="store_true")
     ap.add_argument("--driver", choices=("scan", "reference"), default="scan")
@@ -78,8 +111,24 @@ def main(argv=None):
                  "plane and are silent no-ops on the fluid backend; add "
                  "--env-backend twin")
 
+    if args.fl_async and args.fl_deadline_s <= 0:
+        ap.error("--fl-async parks deadline-missed uploads and needs "
+                 "--fl-deadline-s > 0 to ever have one")
+    if args.fl_pallas and args.fl_codec == "float32":
+        ap.error("--fl-pallas routes the delta codec through the fused "
+                 "kernel, but the float32 codec skips the codec entirely "
+                 "(lossless identity path); add --fl-codec int8 or topk")
+    if args.fl_topk_frac != 0.05 and args.fl_codec != "topk":
+        ap.error("--fl-topk-frac only affects the topk codec; add "
+                 "--fl-codec topk")
+
     cfg = FCPOConfig() if args.fl_every is None else \
         FCPOConfig(fl_every=args.fl_every)
+    transport = TransportConfig(codec=args.fl_codec,
+                                topk_frac=args.fl_topk_frac,
+                                deadline_s=args.fl_deadline_s,
+                                async_rounds=args.fl_async,
+                                use_pallas=args.fl_pallas)
     backend = get_backend(args.env_backend,
                           sim_params=SimParams(dt=args.dt,
                                                k_ticks=args.k_ticks,
@@ -102,7 +151,7 @@ def main(argv=None):
 
     kw = dict(learn=not args.no_learn, federated=not args.no_federated,
               straggler_prob=args.straggler_prob, seed=args.seed,
-              env_backend=backend)
+              env_backend=backend, transport=transport)
     t0 = time.time()
     if args.driver == "scan":
         fleet, hist = train_fleet_scan(cfg, fleet, traces, mesh=mesh, **kw)
@@ -119,6 +168,16 @@ def main(argv=None):
                              ("latency", 1e3, "ms"), ("gated", 1, "")):
         a, b = hist[key][:k].mean() * scale, hist[key][-k:].mean() * scale
         print(f"{key:24s}{a:12.3f}{unit:4s}{b:12.3f}{unit}")
+
+    fl_eps = np.flatnonzero(hist.get("fl_payload_bytes", np.zeros(1)))
+    if fl_eps.size:
+        print(f"\nFL transport (codec={args.fl_codec}, "
+              f"deadline={args.fl_deadline_s}s, async={args.fl_async}): "
+              f"{fl_eps.size} rounds, "
+              f"{hist['fl_payload_bytes'][fl_eps].mean() / 1024:.1f} KB/round, "
+              f"uplink {hist['fl_uplink_s'][fl_eps].mean() * 1e3:.1f} ms, "
+              f"missed {hist['fl_missed'][fl_eps].mean():.2f}/round, "
+              f"stale joins {hist['fl_stale_used'][fl_eps].mean():.2f}/round")
     return fleet, hist
 
 

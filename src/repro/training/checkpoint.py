@@ -74,6 +74,15 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(keys))
 
+    missing = [k for k in keys if k not in data]
+    if missing:
+        raise ValueError(
+            f"checkpoint/model structure mismatch: {len(missing)} leaves of "
+            f"the restore target are absent from the checkpoint (e.g. "
+            f"{missing[:3]}) — the checkpoint likely predates fields added "
+            f"to the state pytree (such as the FL transport residuals/"
+            f"pending buffers); re-save from a current run")
+
     out = []
     for key, leaf, shd in zip(keys, leaves_like, shard_leaves):
         arr = data[key]

@@ -14,21 +14,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# The int8 scalar math lives ONCE in ``repro.kernels.ref`` — shared verbatim
+# with the FL transport delta codec (``repro.fl.codec``) and the fused Pallas
+# ``delta_codec`` kernel, so the two compression paths cannot drift
+# (equivalence regression: tests/test_fl.py). Note: the shared scale is
+# computed as ``max|x| * (1/127)`` (kernel/oracle bit-identity), one ulp off
+# the pre-unification ``max|x| / 127`` — gradient trajectories from older
+# DP-compressed runs reproduce to that tolerance, not bit-for-bit.
+from repro.kernels.ref import dequantize_int8, quantize_int8  # noqa: F401
+
 
 def ef_init(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-
-def quantize_int8(x):
-    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
-    xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
 
 
 def compress_psum(grads, residuals, axis_name):

@@ -258,8 +258,8 @@ class TestFederated:
         fleet = self._fleet(n)
         rates = fleet_traces(KEY, n, CFG.n_steps)
         fleet2, rollouts, _ = fleet_episode(CFG, fleet, rates)
-        fleet3, sel = fl_round(CFG, fleet2, rollouts,
-                               available=jnp.zeros((n,), bool))
+        fleet3, sel, _ = fl_round(CFG, fleet2, rollouts,
+                                  available=jnp.zeros((n,), bool))
         assert int(sel.sum()) == 0
         assert all(np.isfinite(np.asarray(x)).all()
                    for x in jax.tree.leaves(fleet3.astate.params))

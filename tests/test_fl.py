@@ -1,0 +1,408 @@
+"""Federated transport subsystem: delta codec (ref + Pallas kernel),
+communication model, staleness semantics, driver equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core import federated as fed
+from repro.core.agent import agent_init, full_mask
+from repro.core.fleet import (_scan_fn, fl_round, fleet_episode, fleet_init,
+                              train_fleet_reference, train_fleet_scan)
+from repro.data.workload import fleet_traces
+from repro.fl import (TransportConfig, agent_payload_bytes, codec_roundtrip,
+                      downlink_bytes, full_param_bytes, pending_init,
+                      uplink_seconds)
+from repro.kernels import ref
+from repro.kernels.delta_codec import delta_codec
+from repro.training import compression
+
+CFG = FCPOConfig()
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Codec math: shared single definition + oracle behavior
+# ---------------------------------------------------------------------------
+class TestCodecMath:
+    def test_int8_single_definition(self):
+        """Satellite: training/compression.py and the fl codec share ONE
+        int8 definition (the scalar math lives in kernels/ref.py)."""
+        assert compression.quantize_int8 is ref.quantize_int8
+        assert compression.dequantize_int8 is ref.dequantize_int8
+
+    def test_int8_roundtrip_matches_quantize_dequantize_bitwise(self):
+        x = jax.random.normal(KEY, (513,)) * 7.3
+        q, s = ref.quantize_int8(x)
+        via_int8 = ref.dequantize_int8(q, s)
+        dec, s2 = ref.int8_roundtrip(x)
+        np.testing.assert_array_equal(np.asarray(via_int8), np.asarray(dec))
+        assert float(s) == float(s2)
+
+    def test_float32_codec_is_lossless(self):
+        d = jax.random.normal(KEY, (64,))
+        dec, nr = ref.delta_codec_ref(d, jnp.zeros_like(d), codec="float32")
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(d))
+        assert float(jnp.abs(nr).max()) == 0.0
+
+    def test_codec_identity_decoded_plus_residual(self):
+        """decoded + new_residual == delta + residual — the telescoping
+        identity error feedback relies on (bit-exact for topk, within one
+        ulp of the quantization scale for int8)."""
+        k1, k2 = jax.random.split(KEY)
+        d = jax.random.normal(k1, (300,)) * 3
+        r = jax.random.normal(k2, (300,)) * 0.1
+        dec, nr = ref.delta_codec_ref(d, r, codec="topk", k=15)
+        np.testing.assert_array_equal(np.asarray(dec + nr), np.asarray(d + r))
+        dec, nr = ref.delta_codec_ref(d, r, codec="int8")
+        np.testing.assert_allclose(np.asarray(dec + nr), np.asarray(d + r),
+                                   atol=1e-6 * float(jnp.abs(d + r).max()),
+                                   rtol=0)
+
+    def test_topk_exact_k_and_preserved_coords(self):
+        d = jax.random.normal(KEY, (200,))
+        for k in (1, 7, 200):
+            dec, nr = ref.delta_codec_ref(d, jnp.zeros_like(d),
+                                          codec="topk", k=k)
+            mask = np.asarray(ref.topk_mask(jnp.abs(d), k))
+            assert mask.sum() == min(k, 200)
+            # kept coordinates survive bit-exact, the rest are zero
+            np.testing.assert_array_equal(np.asarray(dec)[mask],
+                                          np.asarray(d)[mask])
+            assert np.abs(np.asarray(dec)[~mask]).max(initial=0.0) == 0.0
+
+    def test_topk_mask_breaks_ties_by_index(self):
+        mag = jnp.asarray([1.0, 2.0, 2.0, 2.0, 0.5])
+        mask = np.asarray(ref.topk_mask(mag, 2))
+        np.testing.assert_array_equal(mask, [False, True, True, False, False])
+
+    def test_int8_error_feedback_telescopes(self):
+        """N compressed rounds of the same frozen delta: the cumulative
+        decoded sum equals N*g up to the (bounded) final residual."""
+        g = jax.random.normal(KEY, (128,)) * 2.0
+        r = jnp.zeros_like(g)
+        total = jnp.zeros_like(g)
+        for _ in range(10):
+            dec, r = ref.delta_codec_ref(g, r, codec="int8")
+            total = total + dec
+        drift = np.abs(np.asarray(total + r - 10 * g)).max()
+        assert drift < 1e-4                       # fp summation noise only
+        # int8 EF residual is bounded by ~one quantization step
+        assert float(jnp.abs(r).max()) < 2 * float(jnp.abs(g).max()) / 127
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel == jnp oracle (bit-identical, incl. under vmap)
+# ---------------------------------------------------------------------------
+@pytest.mark.pallas
+class TestDeltaCodecKernel:
+    CASES = [("float32", 1, (4, 64)), ("int8", 1, (4, 64)),
+             ("topk", 7, (4, 64)), ("int8", 1, (2, 1)),
+             ("topk", 1, (2, 1)), ("int8", 1, (8, 3121)),
+             ("topk", 156, (8, 3121))]
+
+    @pytest.mark.parametrize("codec,k,shape", CASES)
+    def test_kernel_bit_identical_to_ref(self, codec, k, shape):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+        d = jax.random.normal(k1, shape) * 4
+        r = jax.random.normal(k2, shape) * 0.2
+        dec_k, nr_k = delta_codec(d, r, codec=codec, k=k, interpret=True)
+        dec_r, nr_r = jax.vmap(lambda x, y: ref.delta_codec_ref(
+            x, y, codec=codec, k=k))(d, r)
+        np.testing.assert_array_equal(np.asarray(dec_k), np.asarray(dec_r))
+        np.testing.assert_array_equal(np.asarray(nr_k), np.asarray(nr_r))
+
+    def test_kernel_bit_identical_under_vmap(self):
+        """vmap of the single-agent kernel call == the batched grid call ==
+        vmap of the oracle."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+        d = jax.random.normal(k1, (5, 96)) * 2
+        r = jax.random.normal(k2, (5, 96)) * 0.1
+        batched = delta_codec(d, r, codec="int8", interpret=True)
+        vmapped = jax.vmap(lambda x, y: delta_codec(
+            x, y, codec="int8", interpret=True))(d, r)
+        oracle = jax.vmap(lambda x, y: ref.delta_codec_ref(
+            x, y, codec="int8"))(d, r)
+        for b, v, o in zip(batched, vmapped, oracle):
+            np.testing.assert_array_equal(np.asarray(b), np.asarray(v))
+            np.testing.assert_array_equal(np.asarray(b), np.asarray(o))
+
+    def test_codec_roundtrip_pallas_path_matches_jnp(self):
+        """The fleet-pytree wrapper: use_pallas routes every leaf through
+        the kernel with identical results."""
+        params = jax.vmap(lambda k: agent_init(CFG, k))(
+            jax.random.split(KEY, 3))
+        delta = jax.tree.map(lambda p: p * 0.01, params)
+        res = jax.tree.map(jnp.zeros_like, params)
+        for codec in ("int8", "topk"):
+            t_j = TransportConfig(codec=codec, use_pallas=False)
+            t_p = TransportConfig(codec=codec, use_pallas=True)
+            dec_j, nr_j = codec_roundtrip(delta, res, t_j)
+            dec_p, nr_p = codec_roundtrip(delta, res, t_p)
+            for a, b in zip(jax.tree.leaves((dec_j, nr_j)),
+                            jax.tree.leaves((dec_p, nr_p))):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation degenerate case (documented, previously untested)
+# ---------------------------------------------------------------------------
+class TestAggregateEmptySelection:
+    def test_empty_selection_degenerates_to_base(self):
+        """fed.aggregate's docstring: aggregation "is defined for any
+        subset, including the empty one, which degenerates to keeping the
+        base network". Backbone/value collapse to the pod base; head groups
+        with no contributor keep each agent's own head; the base itself is
+        unchanged."""
+        n = 4
+        params = jax.vmap(lambda k: agent_init(CFG, k))(
+            jax.random.split(KEY, n))
+        base_one = agent_init(CFG, jax.random.PRNGKey(9))
+        base = jax.tree.map(lambda x: x[None], base_one)
+        masks = jax.tree.map(lambda m: jnp.broadcast_to(m, (n,) + m.shape),
+                             full_mask(CFG))
+        groups = fed.head_group_ids(masks)
+        sel = jnp.zeros((n,), bool)
+        newp, newb = fed.aggregate(CFG, params, base, sel,
+                                   jnp.zeros((n, 3)), groups,
+                                   jnp.zeros((n,), jnp.int32), 1)
+        from repro.core.agent import BACKBONE_KEYS, HEAD_KEYS
+        for key in BACKBONE_KEYS:
+            for a, b in zip(jax.tree.leaves(newp[key]),
+                            jax.tree.leaves(base_one[key])):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.broadcast_to(np.asarray(b), a.shape),
+                    atol=1e-7)
+        for key in HEAD_KEYS:
+            for a, b in zip(jax.tree.leaves(newp[key]),
+                            jax.tree.leaves(params[key])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(newb), jax.tree.leaves(base)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Transport model: emergent stragglers, payload metrics
+# ---------------------------------------------------------------------------
+def _fleet(n=4, bandwidth=None, cfg=CFG, n_pods=1):
+    return fleet_init(cfg, n, KEY, n_pods=n_pods,
+                      bandwidth=None if bandwidth is None
+                      else jnp.asarray(bandwidth))
+
+
+def _episode(cfg, fleet, seed=1):
+    traces = fleet_traces(jax.random.PRNGKey(seed),
+                          fleet.pod_ids.shape[0], cfg.n_steps)
+    return fleet_episode(cfg, fleet, traces)
+
+
+class TestTransportModel:
+    def test_deadline_makes_stragglers_emergent(self):
+        """Slow links miss the round: they drop out of selection and are
+        counted in fl_missed; fast links are unaffected."""
+        cfg = FCPOConfig(clients_per_round=1.0)
+        fleet = _fleet(4, bandwidth=[100.0, 100.0, 0.01, 0.01], cfg=cfg)
+        fleet, rollouts, _ = _episode(cfg, fleet)
+        t = TransportConfig(codec="int8", deadline_s=0.05)
+        _, sel, flm = fl_round(cfg, fleet, rollouts, transport=t)
+        sel = np.asarray(sel)
+        assert sel[:2].all() and not sel[2:].any()
+        assert float(flm["fl_missed"]) == 2.0
+
+    def test_legacy_bernoulli_composes_with_deadline(self):
+        """An agent participates iff Bernoulli-available AND on time."""
+        cfg = FCPOConfig(clients_per_round=1.0)
+        fleet = _fleet(4, bandwidth=[100.0, 100.0, 100.0, 0.01], cfg=cfg)
+        fleet, rollouts, _ = _episode(cfg, fleet)
+        avail = jnp.asarray([True, False, True, True])
+        t = TransportConfig(codec="int8", deadline_s=0.05)
+        _, sel, flm = fl_round(cfg, fleet, rollouts, avail, transport=t)
+        np.testing.assert_array_equal(np.asarray(sel),
+                                      [True, False, True, False])
+        assert float(flm["fl_missed"]) == 1.0   # only the slow AVAILABLE one
+
+    def test_history_payload_matches_static_accounting(self):
+        cfg = FCPOConfig()
+        n = 4
+        fleet = _fleet(n, cfg=cfg)
+        traces = fleet_traces(jax.random.PRNGKey(2), n, 4 * cfg.n_steps)
+        t = TransportConfig(codec="int8")
+        _, hist = train_fleet_scan(cfg, fleet, traces, transport=t)
+        up = agent_payload_bytes(
+            jax.tree.map(lambda x: x[0], fleet.astate.params), t)
+        full = full_param_bytes(
+            jax.tree.map(lambda x: x[0], fleet.astate.params))
+        n_sel = max(1, int(round(cfg.clients_per_round * n)))
+        expect = n_sel * up + downlink_bytes(t, n, 1, up, full)
+        fl_eps = np.flatnonzero(hist["fl_payload_bytes"])
+        np.testing.assert_array_equal(fl_eps, [1, 3])   # fl_every = 2
+        np.testing.assert_allclose(hist["fl_payload_bytes"][fl_eps], expect,
+                                   rtol=1e-6)
+        assert (hist["fl_payload_bytes"][[0, 2]] == 0).all()
+        # uplink seconds surface too and agree with the link model
+        np.testing.assert_allclose(
+            hist["fl_uplink_s"][fl_eps].mean(),
+            float(np.sort(np.asarray(uplink_seconds(up, fleet.bandwidth)))
+                  .mean()), rtol=0.5)   # selection picks a subset of links
+
+    def test_default_transport_keeps_residuals_and_pending_untouched(self):
+        fleet = _fleet(4)
+        fleet, rollouts, _ = _episode(CFG, fleet)
+        fleet2, _, flm = fl_round(CFG, fleet, rollouts)
+        for x in jax.tree.leaves(fleet2.residuals):
+            assert float(jnp.abs(x).max()) == 0.0
+        assert not bool(fleet2.pending.has.any())
+        assert float(flm["fl_stale_used"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Staleness-tolerant (async) rounds
+# ---------------------------------------------------------------------------
+class TestStaleness:
+    def test_miss_parks_then_joins_discounted(self):
+        """Round 1: the slow agent's upload parks. Round 2: the parked
+        delta is consumed (staleness-discounted) while a fresh one parks
+        again."""
+        cfg = FCPOConfig(clients_per_round=1.0)
+        fleet = _fleet(2, bandwidth=[100.0, 0.01], cfg=cfg)
+        t = TransportConfig(codec="int8", deadline_s=0.05, async_rounds=True)
+
+        fleet, rollouts, _ = _episode(cfg, fleet, seed=1)
+        fleet, sel, flm = fl_round(cfg, fleet, rollouts, transport=t)
+        # slow agent selected (async keeps it selectable) but not aggregated
+        np.testing.assert_array_equal(np.asarray(sel), [True, False])
+        np.testing.assert_array_equal(np.asarray(fleet.pending.has),
+                                      [False, True])
+        assert int(fleet.pending.staleness[1]) == 1
+        assert float(flm["fl_stale_used"]) == 0.0
+        assert float(flm["fl_missed"]) == 1.0
+        parked = jax.tree.leaves(fleet.pending.delta)
+        assert any(float(jnp.abs(x[1]).max()) > 0 for x in parked)
+
+        fleet, rollouts, _ = _episode(cfg, fleet, seed=2)
+        fleet, sel, flm = fl_round(cfg, fleet, rollouts, transport=t)
+        # parked delta consumed: the slow agent now joins the aggregate
+        np.testing.assert_array_equal(np.asarray(sel), [True, True])
+        assert float(flm["fl_stale_used"]) == 1.0
+        # ...and its new fresh miss parked again with staleness reset to 1
+        np.testing.assert_array_equal(np.asarray(fleet.pending.has),
+                                      [False, True])
+        assert int(fleet.pending.staleness[1]) == 1
+
+    def test_unselected_pending_ages(self):
+        """A pending delta whose owner is not selected stays parked and its
+        staleness grows."""
+        cfg = FCPOConfig(clients_per_round=0.5)   # top-1 of 2
+        fleet = _fleet(2, bandwidth=[100.0, 0.01], cfg=cfg)
+        t = TransportConfig(codec="int8", deadline_s=0.05, async_rounds=True,
+                            staleness_decay=0.5)
+        # force agent 1 parked by hand, then run a round where it loses
+        # selection to the fast agent (bandwidth enters Eq. 7 utility).
+        pend = pending_init(fleet.astate.params)
+        pend = pend._replace(has=jnp.asarray([False, True]),
+                             staleness=jnp.asarray([0, 1], jnp.int32))
+        fleet = fleet._replace(pending=pend)
+        fleet, rollouts, _ = _episode(cfg, fleet, seed=3)
+        fleet, sel, flm = fl_round(cfg, fleet, rollouts, transport=t)
+        np.testing.assert_array_equal(np.asarray(sel), [True, False])
+        assert bool(fleet.pending.has[1])
+        assert int(fleet.pending.staleness[1]) == 2
+        assert float(flm["fl_stale_used"]) == 0.0
+
+    def test_on_time_but_unselected_owner_keeps_pending(self):
+        """Losing Eq. 7 selection is not an upload: an on-time owner's
+        parked delta must survive (and age), not be silently dropped."""
+        cfg = FCPOConfig(clients_per_round=0.5)   # top-1 of 2
+        fleet = _fleet(2, bandwidth=[100.0, 50.0], cfg=cfg)
+        t = TransportConfig(codec="int8", deadline_s=0.05, async_rounds=True)
+        pend = pending_init(fleet.astate.params)
+        pend = pend._replace(has=jnp.asarray([False, True]),
+                             staleness=jnp.asarray([0, 1], jnp.int32))
+        fleet = fleet._replace(pending=pend)
+        fleet, rollouts, _ = _episode(cfg, fleet, seed=6)
+        fleet, sel, flm = fl_round(cfg, fleet, rollouts, transport=t)
+        # agent 1 is on time (fast link) but loses selection to agent 0
+        np.testing.assert_array_equal(np.asarray(sel), [True, False])
+        assert bool(fleet.pending.has[1])
+        assert int(fleet.pending.staleness[1]) == 2
+        assert float(flm["fl_stale_used"]) == 0.0
+
+    def test_unselected_agents_enter_aggregation_uncompressed(self):
+        """A lossy codec must only distort what actually crossed the wire:
+        with an empty selection the round must equal the float32 round
+        (Alg. 1's no-contributor fallback keeps TRUE heads, not a lossy
+        reconstruction whose error feedback was never committed)."""
+        cfg = FCPOConfig()
+        f_int8 = _fleet(4, cfg=cfg)
+        f_int8, rollouts, _ = _episode(cfg, f_int8)
+        none = jnp.zeros((4,), bool)
+        out8, _, _ = fl_round(cfg, f_int8, rollouts, none,
+                              transport=TransportConfig(codec="int8"))
+        out32, _, _ = fl_round(cfg, f_int8, rollouts, none)
+        for a, b in zip(jax.tree.leaves(out8.astate.params),
+                        jax.tree.leaves(out32.astate.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_fresh_arrival_supersedes_pending(self):
+        cfg = FCPOConfig(clients_per_round=1.0)
+        fleet = _fleet(2, bandwidth=[100.0, 100.0], cfg=cfg)
+        t = TransportConfig(codec="int8", deadline_s=0.05, async_rounds=True)
+        pend = pending_init(fleet.astate.params)
+        pend = pend._replace(has=jnp.asarray([False, True]),
+                             staleness=jnp.asarray([0, 3], jnp.int32))
+        fleet = fleet._replace(pending=pend)
+        fleet, rollouts, _ = _episode(cfg, fleet, seed=4)
+        fleet, sel, flm = fl_round(cfg, fleet, rollouts, transport=t)
+        np.testing.assert_array_equal(np.asarray(sel), [True, True])
+        assert not bool(fleet.pending.has.any())     # superseded, dropped
+        assert float(flm["fl_stale_used"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Driver equivalence + compile-once with transport enabled
+# ---------------------------------------------------------------------------
+class TestScanEquivalenceWithTransport:
+    TRANSPORT = TransportConfig(codec="int8", deadline_s=0.02,
+                                async_rounds=True)
+
+    def test_scan_matches_reference_with_transport(self):
+        """10 episodes, int8 codec + deadline + async staleness + Bernoulli
+        stragglers, 2 pods: scan == reference trajectory-for-trajectory,
+        including the new fl_* history keys and the transport state."""
+        n = 4
+        cfg = FCPOConfig()
+        f_ref = fleet_init(cfg, n, KEY, n_pods=2)
+        f_scan = fleet_init(cfg, n, KEY, n_pods=2)
+        traces = fleet_traces(jax.random.PRNGKey(1), n, 10 * cfg.n_steps)
+        kw = dict(straggler_prob=0.3, seed=7, transport=self.TRANSPORT)
+        rf, rh = train_fleet_reference(cfg, f_ref, traces, **kw)
+        sf, sh = train_fleet_scan(cfg, f_scan, traces, **kw)
+        assert sorted(rh) == sorted(sh)
+        assert any(k.startswith("fl_") for k in sh)
+        for k in rh:
+            np.testing.assert_allclose(sh[k], rh[k], rtol=1e-4, atol=1e-5,
+                                       err_msg=k)
+        for a, b in zip(jax.tree.leaves(rf.astate.params),
+                        jax.tree.leaves(sf.astate.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        for a, b in zip(jax.tree.leaves((rf.residuals, rf.pending)),
+                        jax.tree.leaves((sf.residuals, sf.pending))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_scan_compiles_once_with_codec(self):
+        """Any codec keeps the whole cadence ONE cached jitted scan."""
+        n, eps = 2, 4
+        cfg = FCPOConfig()
+        traces = fleet_traces(jax.random.PRNGKey(1), n, eps * cfg.n_steps)
+        t = TransportConfig(codec="topk")
+        fn = _scan_fn(False)
+        train_fleet_scan(cfg, fleet_init(cfg, n, KEY), traces, donate=False,
+                         transport=t)
+        size = fn._cache_size()
+        train_fleet_scan(cfg, fleet_init(cfg, n, KEY), traces, donate=False,
+                         transport=t)
+        assert fn._cache_size() == size

@@ -89,6 +89,59 @@ def test_sim_microtick_conservation(arrivals, c_pre, c_post, batch, t_batch):
 
 
 # ---------------------------------------------------------------------------
+# FL transport codec invariants (repro.fl / kernels.ref)
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-20, 20), min_size=4, max_size=64),
+       st.sampled_from(["int8", "topk"]), st.integers(2, 8),
+       st.integers(1, 6))
+def test_error_feedback_residuals_telescope(vals, codec, n_rounds, k):
+    """After N compressed rounds with frozen inputs, the cumulative decoded
+    deltas approach the uncompressed sum: Σ decoded + r_N == N·g + r_0 up to
+    float summation noise (the per-round identity decoded + r' == g + r is
+    bit-exact), and the residual stays bounded (no drift blow-up)."""
+    g = jnp.asarray(vals, jnp.float32)
+    k = min(k, g.shape[0])
+    r = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(n_rounds):
+        r_old = r
+        dec, r = ref.delta_codec_ref(g, r, codec=codec, k=k)
+        # per-round identity decoded + r' == g + r (bit-exact for topk,
+        # one ulp of the quantization scale for int8)
+        np.testing.assert_allclose(np.asarray(dec + r),
+                                   np.asarray(g + r_old),
+                                   atol=1e-5 * max(float(jnp.abs(g).max()),
+                                                   1.0), rtol=0)
+        total = total + dec
+    gmax = max(float(jnp.abs(g).max()), 1e-6)
+    drift = np.abs(np.asarray(total + r - n_rounds * g)).max()
+    assert drift <= 1e-4 * n_rounds * max(gmax, 1.0)
+    # bounded residual: int8 error is ~one quantization step; top-k error
+    # feedback accumulates at most the untransmitted mass of one round
+    # on top of the previous residual, which stays O((n/k)·|g|).
+    bound = (2 * gmax / 127 if codec == "int8"
+             else (g.shape[0] / k + 1) * gmax)
+    assert float(jnp.abs(r).max()) <= bound + 1e-5
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-50, 50), min_size=2, max_size=64),
+       st.integers(1, 64))
+def test_topk_roundtrip_preserves_selected_coordinates(vals, k):
+    """top-k encode/decode keeps EXACTLY k coordinates, bit-exact, and the
+    residual is exactly the untransmitted mass."""
+    g = jnp.asarray(vals, jnp.float32)
+    k = min(k, g.shape[0])
+    dec, r = ref.delta_codec_ref(g, jnp.zeros_like(g), codec="topk", k=k)
+    mask = np.asarray(ref.topk_mask(jnp.abs(g), k))
+    assert int(mask.sum()) == k
+    np.testing.assert_array_equal(np.asarray(dec)[mask], np.asarray(g)[mask])
+    assert np.abs(np.asarray(dec)[~mask]).max(initial=0.0) == 0.0
+    np.testing.assert_array_equal(np.asarray(dec + r), np.asarray(g))
+
+
+# ---------------------------------------------------------------------------
 # Aggregation invariants
 # ---------------------------------------------------------------------------
 def _mini_fleet(n, seed=0):

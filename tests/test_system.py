@@ -137,7 +137,7 @@ class TestFCPOSystem:
         assert fleet.group_counts["head_bs"] == 2
         traces = fleet_traces(jax.random.PRNGKey(5), n, 200)
         fleet, rollouts, _ = fleet_episode(cfg, fleet, traces[:, :cfg.n_steps])
-        fleet2, sel = fl_round(cfg, fleet, rollouts)
+        fleet2, sel, _ = fl_round(cfg, fleet, rollouts)
         # constrained agents never act outside their mask
         fleet3, rollouts3, _ = fleet_episode(
             cfg, fleet2, traces[:, cfg.n_steps:2 * cfg.n_steps])
