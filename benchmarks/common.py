@@ -4,8 +4,9 @@ from __future__ import annotations
 import json
 import os
 import platform
+import subprocess
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -31,25 +32,55 @@ def load_rows(name: str):
     return None
 
 
-def save_bench(name: str, results: List[Dict]) -> str:
+def git_sha() -> str:
+    """Commit SHA of the working tree — ``git rev-parse`` first, then the CI
+    env (``GITHUB_SHA``), else ``"unknown"``. Never raises: envelopes must
+    still be writable from an exported (non-git) tree."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return os.environ.get("GITHUB_SHA", "unknown")
+
+
+def save_bench(name: str, results: List[Dict], extra: Optional[Dict] = None,
+               out_dir: Optional[str] = None) -> str:
     """Machine-readable benchmark artifact: ``BENCH_<name>.json`` at the repo
-    root, for CI trend tracking and regression gates. ``results`` is the
-    same row list the figure scripts cache/emit; the envelope adds the
-    backend and a timestamp so artifacts from different hosts are
-    distinguishable."""
+    root (or ``out_dir``), for CI trend tracking and regression gates.
+    ``results`` is the same row list the figure scripts cache/emit; the
+    envelope stamps provenance — git SHA, jax version, backend, platform,
+    timestamp — so artifacts from different hosts/commits are comparable
+    (leaderboard deltas are meaningless without it). ``extra`` merges
+    top-level keys into the envelope (reserved keys win)."""
     import jax
 
-    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
-    payload = {
+    path = os.path.join(out_dir or REPO_ROOT, f"BENCH_{name}.json")
+    payload = dict(extra or {})
+    payload.update({
         "name": name,
+        "git_sha": git_sha(),
+        "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "platform": platform.platform(),
         "timestamp": time.time(),
         "results": results,
-    }
+    })
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float, sort_keys=True)
     return path
+
+
+def load_bench(name: str, out_dir: Optional[str] = None) -> Optional[Dict]:
+    """Read back a ``save_bench`` envelope (the previous run's, for
+    leaderboard deltas); None when it does not exist yet."""
+    path = os.path.join(out_dir or REPO_ROOT, f"BENCH_{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:

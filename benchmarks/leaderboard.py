@@ -1,0 +1,154 @@
+"""Standing-eval leaderboard CLI: score a checkpoint on the scenario ×
+backend × codec grid and gate CI on regressions.
+
+Thin driver over ``repro.eval.leaderboard``: builds (or restores) a fleet,
+runs every grid cell through the real production cadence
+(``train_fleet_scan`` + held-out ``eval_fleet`` on the request-level twin),
+and writes a ``BENCH_leaderboard[_smoke].json`` envelope (``save_bench``
+provenance: git SHA, jax version, backend) with per-cell mean±std metrics
+and deltas against the previous envelope at the same path. ``--gate`` turns
+those deltas into an exit code: non-zero when reward or effective
+throughput drops beyond the per-cell tolerance.
+
+Examples:
+  PYTHONPATH=src python benchmarks/leaderboard.py --smoke --gate
+  PYTHONPATH=src python benchmarks/leaderboard.py --ckpt-dir /ckpts/run17 \
+      --replicates 3 --n-jobs 4
+  PYTHONPATH=src python benchmarks/leaderboard.py --scenarios drift,ood \
+      --codecs topk --episodes 10
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+from benchmarks.common import load_bench, save_bench
+from repro.configs.fcpo import FCPOConfig
+from repro.core.backends import BACKENDS
+from repro.core.fleet import fleet_init
+from repro.eval.leaderboard import (DEFAULT_TOL, GRID_CODECS, REPLICATES,
+                                    attach_deltas, check_regressions,
+                                    grid_cells, load_fleet, run_leaderboard)
+from repro.sim import SCENARIOS
+
+# CI smoke slice: 2 scenarios x 2 backends x 2 codecs, 1 replicate — one
+# steady cell and one distribution-shift cell, both env backends, the
+# lossless codec and one compressed codec. Small but spans every axis.
+SMOKE_SCENARIOS = ("steady", "ood")
+SMOKE_BACKENDS = BACKENDS
+SMOKE_CODECS = ("float32", "int8")
+
+
+def _csv(choices):
+    def parse(s):
+        vals = tuple(v for v in s.split(",") if v)
+        bad = [v for v in vals if v not in choices]
+        if bad:
+            raise argparse.ArgumentTypeError(
+                f"unknown {bad}; choices: {', '.join(choices)}")
+        return vals
+    return parse
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI grid (2 scenarios x 2 backends x "
+                         "2 codecs, 1 replicate) written to "
+                         "BENCH_leaderboard_smoke.json")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero when any cell regresses beyond "
+                         "--tol vs the previous envelope")
+    ap.add_argument("--ckpt-dir", type=str, default=None,
+                    help="restore the fleet from this checkpoint dir "
+                         "(training.checkpoint layout); default: a fresh "
+                         "seed-0 fleet_init")
+    ap.add_argument("--ckpt-step", type=int, default=None,
+                    help="checkpoint step (default: latest)")
+    ap.add_argument("--scenarios", type=_csv(SCENARIOS), default=None,
+                    help="comma list overriding the scenario axis")
+    ap.add_argument("--backends", type=_csv(BACKENDS), default=None,
+                    help="comma list overriding the backend axis")
+    ap.add_argument("--codecs", type=_csv(GRID_CODECS), default=None,
+                    help="comma list overriding the FL codec axis")
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--episodes", type=int, default=None,
+                    help="training episodes per cell (default 6; smoke 4)")
+    ap.add_argument("--eval-intervals", type=int, default=None,
+                    help="held-out twin eval intervals (default 30; "
+                         "smoke 16)")
+    ap.add_argument("--replicates", type=int, default=None,
+                    help=f"seeds per cell (default {REPLICATES}; smoke 1)")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="per-cell relative regression tolerance")
+    ap.add_argument("--n-jobs", type=int, default=1,
+                    help="round-robin shards (result order and values are "
+                         "independent of this — determinism is tested)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", type=str, default=None,
+                    help="envelope directory (default: repo root)")
+    args = ap.parse_args(argv)
+
+    name = "leaderboard_smoke" if args.smoke else "leaderboard"
+    scenarios = args.scenarios or (SMOKE_SCENARIOS if args.smoke
+                                   else SCENARIOS)
+    backends = args.backends or (SMOKE_BACKENDS if args.smoke else BACKENDS)
+    codecs = args.codecs or (SMOKE_CODECS if args.smoke else GRID_CODECS)
+    replicates = args.replicates or (1 if args.smoke else REPLICATES)
+    episodes = args.episodes or (4 if args.smoke else 6)
+    eval_intervals = args.eval_intervals or (16 if args.smoke else 30)
+
+    cfg = FCPOConfig()
+    if args.ckpt_dir:
+        fleet = load_fleet(cfg, args.ckpt_dir, args.ckpt_step,
+                           n_agents=args.agents)
+        source = f"checkpoint {args.ckpt_dir}"
+    else:
+        fleet = fleet_init(cfg, args.agents, jax.random.PRNGKey(args.seed))
+        source = f"fleet_init(seed={args.seed})"
+
+    cells = grid_cells(scenarios, backends, codecs)
+    print(f"leaderboard: {len(cells)} cells "
+          f"({len(scenarios)} scenarios x {len(backends)} backends x "
+          f"{len(codecs)} codecs), {replicates} replicate(s), "
+          f"A={args.agents}, {source}")
+    t0 = time.time()
+    rows = run_leaderboard(cfg, fleet, cells, episodes=episodes,
+                           eval_intervals=eval_intervals,
+                           replicates=replicates, seed=args.seed,
+                           n_jobs=args.n_jobs, log=print)
+    print(f"grid wall {time.time() - t0:.1f}s")
+
+    prev = load_bench(name, out_dir=args.out_dir)
+    attach_deltas(rows, prev)
+    path = save_bench(name, rows, out_dir=args.out_dir, extra={
+        "grid": {"scenarios": list(scenarios), "backends": list(backends),
+                 "codecs": list(codecs)},
+        "agents": args.agents, "episodes": episodes,
+        "eval_intervals": eval_intervals, "replicates": replicates,
+        "seed": args.seed, "source": source,
+        "prev_git_sha": (prev or {}).get("git_sha"),
+    })
+    print(f"envelope: {path}" + ("" if prev is None else
+          f"  (deltas vs git_sha={(prev or {}).get('git_sha', '?')[:12]})"))
+
+    if args.gate:
+        fails = check_regressions(rows, tol=args.tol)
+        if prev is None:
+            print("gate: no previous envelope — nothing to compare, pass")
+        elif fails:
+            print(f"gate: {len(fails)} regression(s) beyond tol="
+                  f"{args.tol:.0%}:", file=sys.stderr)
+            for f in fails:
+                print(f"  {f}", file=sys.stderr)
+            return 1
+        else:
+            print(f"gate: pass ({len(rows)} cells within tol={args.tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

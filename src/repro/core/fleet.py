@@ -332,10 +332,13 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                           learn: bool = True, federated: bool = True,
                           straggler_prob: float = 0.0, seed: int = 0,
                           env_backend=None,
-                          transport: Optional[TransportConfig] = None):
+                          transport: Optional[TransportConfig] = None,
+                          metrics_sink=None):
     """The original Python-loop driver: one host dispatch per episode plus a
     per-metric host sync — O(n_episodes) dispatches. Kept as the equivalence
-    oracle for ``train_fleet_scan`` (same seeds => same straggler draws)."""
+    oracle for ``train_fleet_scan`` (same seeds => same straggler draws).
+    ``metrics_sink`` gets the same per-episode records as the scan driver's
+    streaming tap, appended directly from the loop."""
     backend = get_backend(env_backend)
     transport = DEFAULT_TRANSPORT if transport is None else transport
     a, total = traces.shape
@@ -355,9 +358,43 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
             rounds += 1
             if rounds % cfg.hierarchical_period == 0 and fleet.n_pods > 1:
                 fleet = pod_merge(cfg, fleet)
-        for k, v in {**metrics, **fl_metrics}.items():
-            history.setdefault(k, []).append(np.asarray(v).mean())
+        ep_metrics = {k: float(np.asarray(v).mean())
+                      for k, v in {**metrics, **fl_metrics}.items()}
+        for k, v in ep_metrics.items():
+            history.setdefault(k, []).append(v)
+        if metrics_sink is not None:
+            metrics_sink.append({"episode": e, **ep_metrics})
     return fleet, {k: np.asarray(v) for k, v in history.items()}
+
+
+# ---------------------------------------------------------------------------
+# Streaming metrics: a host-side sink tap on the per-episode metrics
+# ---------------------------------------------------------------------------
+# Sinks are registered here and addressed by an integer id passed to the
+# compiled scan as a plain (non-static) operand, so attaching a different
+# sink object to a same-shaped run NEVER recompiles — only the stream
+# on/off bit is part of the jit cache key. The sink itself is duck-typed
+# (anything with ``.append(record)``; ``repro.eval.stream.MetricsSink`` is
+# the JSONL file implementation), which keeps ``core`` free of any
+# dependency on the eval/observability layer.
+_METRIC_SINKS: Dict[int, Any] = {}
+_NEXT_SINK_ID = [1]
+
+
+def _register_sink(sink) -> int:
+    sid = _NEXT_SINK_ID[0]
+    _NEXT_SINK_ID[0] += 1
+    _METRIC_SINKS[sid] = sink
+    return sid
+
+
+def _sink_emit(names, sink_id, episode, values):
+    """Host callback target (ordered ``jax.debug.callback`` from the scan
+    body / plain call from the reference loop): one record per episode."""
+    sink = _METRIC_SINKS.get(int(sink_id))
+    if sink is not None:
+        sink.append({"episode": int(episode),
+                     **{k: float(v) for k, v in zip(names, values)}})
 
 
 # ---------------------------------------------------------------------------
@@ -365,14 +402,18 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
 # compiled program
 # ---------------------------------------------------------------------------
 def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
-                 avail: jnp.ndarray, do_fl: jnp.ndarray, learn: bool,
-                 backend: EnvBackend, transport: TransportConfig):
-    """Scan body host fn. rates_eps: (n_eps, A, n_steps); avail/do_fl:
-    pre-drawn availability bits and FL schedule, consumed as scan xs."""
+                 avail: jnp.ndarray, do_fl: jnp.ndarray, ep_idx: jnp.ndarray,
+                 sink_id: jnp.ndarray, learn: bool, backend: EnvBackend,
+                 transport: TransportConfig, stream: bool):
+    """Scan body host fn. rates_eps: (n_eps, A, n_steps); avail/do_fl/ep_idx:
+    pre-drawn availability bits, FL schedule, and episode indices, consumed
+    as scan xs. ``stream`` (static) taps every episode's metrics out to the
+    registered sink ``sink_id`` via an ordered host callback — the run is
+    still ONE dispatch, but the sink's JSONL file tails live."""
 
     def body(carry, xs):
         flt, rounds = carry
-        rates, av, fl = xs
+        rates, av, fl, ep_i = xs
         flt, rollouts, metrics = fleet_episode(cfg, flt, rates, learn=learn,
                                                backend=backend)
 
@@ -391,10 +432,16 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
         (flt, rounds), flm = jax.lax.cond(fl, with_fl, no_fl, (flt, rounds))
         ep_metrics = {k: v.mean() for k, v in metrics.items()}
         ep_metrics.update(flm)
+        if stream:
+            names = tuple(sorted(ep_metrics))
+            jax.debug.callback(partial(_sink_emit, names), sink_id, ep_i,
+                               tuple(ep_metrics[k] for k in names),
+                               ordered=True)
         return (flt, rounds), ep_metrics
 
     (fleet, _), history = jax.lax.scan(
-        body, (fleet, jnp.zeros((), jnp.int32)), (rates_eps, avail, do_fl))
+        body, (fleet, jnp.zeros((), jnp.int32)),
+        (rates_eps, avail, do_fl, ep_idx))
     return fleet, history
 
 
@@ -403,7 +450,7 @@ _SCAN_FNS: Dict[bool, Any] = {}
 
 def _scan_fn(donate: bool):
     if donate not in _SCAN_FNS:
-        kw = dict(static_argnums=(0, 5, 6, 7))
+        kw = dict(static_argnums=(0, 7, 8, 9, 10))
         if donate:
             kw["donate_argnums"] = (1,)
         _SCAN_FNS[donate] = jax.jit(_scan_driver, **kw)
@@ -415,7 +462,8 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                      straggler_prob: float = 0.0, seed: int = 0,
                      mesh=None, donate: Optional[bool] = None,
                      env_backend=None,
-                     transport: Optional[TransportConfig] = None):
+                     transport: Optional[TransportConfig] = None,
+                     metrics_sink=None):
     """Scanned fleet driver: episodes over ``traces`` (A, total_steps), FL
     every ``fl_every`` episodes (stragglers masked by pre-drawn availability
     bits), cross-pod merge every ``hierarchical_period`` rounds — all inside
@@ -434,7 +482,13 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     ``straggler_prob`` mask), and async staleness semantics; the per-round
     communication metrics (``fl_payload_bytes``/``fl_uplink_s``/
     ``fl_missed``/``fl_stale_used``) appear in the history, zero on
-    episodes without a round. Returns (fleet, history) with history as
+    episodes without a round.
+    ``metrics_sink``: any object with ``.append(record)`` (e.g.
+    ``repro.eval.stream.MetricsSink``) — every episode's metrics are tapped
+    out of the scan through an ordered host callback as they complete, so a
+    long run is observable live (``launch/watch.py``) while still being ONE
+    dispatch. Off (None) by default, in which case the traced program is
+    exactly the sink-free one. Returns (fleet, history) with history as
     per-episode numpy arrays, fetched in a single device->host transfer."""
     backend = get_backend(env_backend)
     transport = DEFAULT_TRANSPORT if transport is None else transport
@@ -447,6 +501,7 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
         a, n_eps, cfg.n_steps).transpose(1, 0, 2)
     avail = jnp.asarray(avail)
     do_fl = jnp.asarray(schedule)
+    ep_idx = jnp.arange(n_eps, dtype=jnp.int32)
 
     if mesh is not None:
         fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
@@ -456,15 +511,27 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
 
     if donate is None:
         donate = jax.default_backend() != "cpu"
-    fleet, history = _scan_fn(bool(donate))(
-        cfg, fleet, rates_eps, avail, do_fl, learn, backend, transport)
-    return fleet, jax.device_get(history)
+    stream = metrics_sink is not None
+    sid = _register_sink(metrics_sink) if stream else 0
+    try:
+        fleet, history = _scan_fn(bool(donate))(
+            cfg, fleet, rates_eps, avail, do_fl, ep_idx,
+            jnp.asarray(sid, jnp.int32), learn, backend, transport, stream)
+        history = jax.device_get(history)
+    finally:
+        if stream:
+            # the history fetch blocks on the compute; the callback effects
+            # drain behind it — barrier before releasing the sink slot
+            jax.effects_barrier()
+            _METRIC_SINKS.pop(sid, None)
+    return fleet, history
 
 
 def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                 learn: bool = True, federated: bool = True,
                 straggler_prob: float = 0.0, seed: int = 0,
-                env_backend=None, transport: Optional[TransportConfig] = None):
+                env_backend=None, transport: Optional[TransportConfig] = None,
+                metrics_sink=None):
     """Compatibility entry point — delegates to the scanned driver. Buffer
     donation stays off so callers may keep using the input fleet (forking a
     fleet into warm/cold copies is a common pattern in the benchmarks)."""
@@ -472,4 +539,4 @@ def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                             federated=federated,
                             straggler_prob=straggler_prob, seed=seed,
                             donate=False, env_backend=env_backend,
-                            transport=transport)
+                            transport=transport, metrics_sink=metrics_sink)

@@ -1,0 +1,19 @@
+"""Standing evaluation harness — see docs/architecture.md, "Standing
+evaluation".
+
+``repro.eval.leaderboard`` scores any checkpoint across the full
+scenario × backend × codec grid through the real production cadence
+(``train_fleet_scan`` + ``sim.harness.eval_fleet``) and turns the results
+into diffable ``BENCH_leaderboard.json`` envelopes with regression deltas
+(``benchmarks/leaderboard.py`` is the CLI). ``repro.eval.stream`` is the
+live-observability side: the JSONL ``MetricsSink`` both fleet drivers
+accept and ``launch/watch.py`` reads.
+"""
+from repro.eval.leaderboard import (Cell, DEFAULT_TOL, GATE_METRICS,  # noqa: F401
+                                    GRID_BACKENDS, GRID_CODECS,
+                                    GRID_SCENARIOS, REPLICATES,
+                                    attach_deltas, cell_seed,
+                                    check_regressions, evaluate_cell,
+                                    grid_cells, load_fleet, run_leaderboard)
+from repro.eval.stream import (MetricsSink, fl_round_summary,  # noqa: F401
+                               read_metrics, tail_summary)

@@ -1,0 +1,120 @@
+"""Streaming metrics: a JSONL sink for live fleet observability.
+
+Long training runs used to be black boxes: the scanned driver is ONE jitted
+dispatch, so the per-episode history only materializes when the whole run
+returns. ``MetricsSink`` is the observability tap both fleet drivers accept
+(``train_fleet_scan(..., metrics_sink=...)`` /
+``train_fleet_reference(..., metrics_sink=...)``): one JSON line per
+episode — reward, throughput, the FL transport metrics
+(``fl_payload_bytes`` / ``fl_missed`` / ``fl_stale_used``), everything in
+the run history — appended and flushed *as the episode completes*. Inside
+the scanned driver the records are emitted by an ordered
+``jax.debug.callback`` from the scan body, so the file tails live even
+though the host dispatched only once; the default (no sink) path traces
+the exact pre-sink program.
+
+File format: line 1 is a ``{"kind": "meta", ...}`` header (run shape,
+backend, scenario — whatever the writer stamps); every further line is
+``{"episode": int, "<metric>": float, ...}``. ``launch/watch.py`` is the
+reader CLI; ``read_metrics`` / ``tail_summary`` are the library surface it
+(and the tests) share.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+META_KIND = "meta"
+
+
+class MetricsSink:
+    """Append-only JSONL metrics writer. Records are flushed per line so a
+    reader (``launch/watch.py --follow``) sees them while the run is live.
+    Usable as a context manager; ``append`` after ``close`` raises."""
+
+    def __init__(self, path: str, meta: Optional[Dict[str, Any]] = None):
+        self.path = path
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "w")
+        self.n_records = 0
+        header = {"kind": META_KIND}
+        header.update(meta or {})
+        self._write(header)
+
+    def _write(self, obj: Dict[str, Any]):
+        self._f.write(json.dumps(obj, sort_keys=True, default=float) + "\n")
+        self._f.flush()
+
+    def append(self, record: Dict[str, Any]):
+        """One per-episode record: plain scalars only (the fleet drivers
+        pass ``{"episode": int, **metric_floats}``)."""
+        self._write(record)
+        self.n_records += 1
+
+    def close(self):
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "MetricsSink":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_metrics(path: str) -> Tuple[Dict[str, Any], List[Dict[str, Any]]]:
+    """Parse a metrics JSONL file -> (meta, records). Tolerates a torn last
+    line (the writer may be mid-append) by dropping it."""
+    meta: Dict[str, Any] = {}
+    records: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # torn tail of a live file
+            if i == 0 and obj.get("kind") == META_KIND:
+                meta = {k: v for k, v in obj.items() if k != "kind"}
+            else:
+                records.append(obj)
+    return meta, records
+
+
+def tail_summary(records: List[Dict[str, Any]], k: int = 10
+                 ) -> Dict[str, Dict[str, float]]:
+    """Per-metric {"last": newest value, "tail_mean": mean over the last k
+    records, "mean": run mean} for every numeric key except ``episode``."""
+    out: Dict[str, Dict[str, float]] = {}
+    if not records:
+        return out
+    keys = [key for key in records[-1]
+            if key != "episode" and isinstance(records[-1][key], (int, float))]
+    tail = records[-k:]
+    for key in keys:
+        vals = [r[key] for r in records if key in r]
+        tvals = [r[key] for r in tail if key in r]
+        out[key] = {"last": float(vals[-1]),
+                    "tail_mean": float(sum(tvals) / max(len(tvals), 1)),
+                    "mean": float(sum(vals) / max(len(vals), 1))}
+    return out
+
+
+def fl_round_summary(records: List[Dict[str, Any]]) -> Optional[Dict[str, float]]:
+    """FL transport digest over the episodes that actually held a round
+    (``fl_payload_bytes > 0``); None when the run had no rounds (yet)."""
+    rounds = [r for r in records if r.get("fl_payload_bytes", 0.0) > 0.0]
+    if not rounds:
+        return None
+    mean = lambda key: float(sum(r.get(key, 0.0) for r in rounds) / len(rounds))
+    return {
+        "rounds": float(len(rounds)),
+        "payload_bytes": mean("fl_payload_bytes"),
+        "uplink_s": mean("fl_uplink_s"),
+        "missed": mean("fl_missed"),
+        "stale_used": mean("fl_stale_used"),
+    }

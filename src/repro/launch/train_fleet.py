@@ -38,6 +38,7 @@ from repro.configs.fcpo import FCPOConfig
 from repro.core.backends import BACKENDS, get_backend
 from repro.core.fleet import (fleet_init, train_fleet_reference,
                               train_fleet_scan)
+from repro.eval.stream import MetricsSink
 from repro.fl import CODECS, TransportConfig
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.sim import SCENARIOS, SimParams, make_scenario
@@ -96,6 +97,11 @@ def main(argv=None):
     ap.add_argument("--pallas", action="store_true",
                     help="route the twin data plane through the fused "
                          "Pallas queue_advance kernel")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="stream per-episode metrics (reward, "
+                         "fl_payload_bytes, miss/stale rates, ...) to this "
+                         "JSONL file while training runs; tail it live with "
+                         "python -m repro.launch.watch <file> --follow")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.episodes < 1:
@@ -152,11 +158,23 @@ def main(argv=None):
     kw = dict(learn=not args.no_learn, federated=not args.no_federated,
               straggler_prob=args.straggler_prob, seed=args.seed,
               env_backend=backend, transport=transport)
+    sink = None
+    if args.metrics_out:
+        sink = MetricsSink(args.metrics_out, meta=dict(
+            agents=args.agents, pods=args.pods, episodes=args.episodes,
+            driver=args.driver, env_backend=backend.name,
+            scenario=args.scenario, fl_codec=args.fl_codec, seed=args.seed))
+        kw["metrics_sink"] = sink
     t0 = time.time()
-    if args.driver == "scan":
-        fleet, hist = train_fleet_scan(cfg, fleet, traces, mesh=mesh, **kw)
-    else:
-        fleet, hist = train_fleet_reference(cfg, fleet, traces, **kw)
+    try:
+        if args.driver == "scan":
+            fleet, hist = train_fleet_scan(cfg, fleet, traces, mesh=mesh,
+                                           **kw)
+        else:
+            fleet, hist = train_fleet_reference(cfg, fleet, traces, **kw)
+    finally:
+        if sink is not None:
+            sink.close()
     wall = time.time() - t0
 
     k = max(args.episodes // 10, 1)

@@ -1,0 +1,84 @@
+"""Live metrics watcher: tail the JSONL stream a fleet run writes.
+
+``train_fleet.py --metrics-out run.jsonl`` streams one record per episode
+(from inside the single jitted scan, via an ordered ``jax.debug.callback``);
+this CLI reads the same file — once, or continuously with ``--follow`` —
+and prints the run header, a per-metric tail summary, and the FL transport
+digest. Torn last lines (the writer may be mid-append) are tolerated by
+``repro.eval.stream.read_metrics``.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.watch run.jsonl
+  PYTHONPATH=src python -m repro.launch.watch run.jsonl --follow --interval 2
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from repro.eval.stream import fl_round_summary, read_metrics, tail_summary
+
+WATCH_METRICS = ("reward", "throughput", "effective_throughput", "latency",
+                 "loss", "gated", "fl_payload_bytes", "fl_missed",
+                 "fl_stale_used")
+
+
+def render(path: str, tail_k: int, metrics=WATCH_METRICS) -> str:
+    """One status report for the metrics file — the string ``main`` prints.
+    Pure function of the file contents so tests can diff it."""
+    meta, records = read_metrics(path)
+    lines = []
+    if meta:
+        lines.append("run: " + "  ".join(
+            f"{k}={meta[k]}" for k in sorted(meta)))
+    lines.append(f"episodes recorded: {len(records)}")
+    summary = tail_summary(records, k=tail_k)
+    shown = [m for m in metrics if m in summary] or sorted(summary)
+    if shown:
+        lines.append(f"{'metric':24s}{'last':>12s}"
+                     f"{f'tail[{tail_k}]':>12s}{'mean':>12s}")
+        for m in shown:
+            s = summary[m]
+            lines.append(f"{m:24s}{s['last']:12.4f}"
+                         f"{s['tail_mean']:12.4f}{s['mean']:12.4f}")
+    fl = fl_round_summary(records)
+    if fl is not None:
+        lines.append(f"FL: {fl['rounds']:.0f} rounds, "
+                     f"{fl['payload_bytes'] / 1024:.1f} KB/round, "
+                     f"uplink {fl['uplink_s'] * 1e3:.1f} ms, "
+                     f"missed {fl['missed']:.2f}/round, "
+                     f"stale joins {fl['stale_used']:.2f}/round")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="metrics JSONL file "
+                                 "(train_fleet.py --metrics-out)")
+    ap.add_argument("--tail", type=int, default=10,
+                    help="episodes in the tail-mean window")
+    ap.add_argument("--follow", action="store_true",
+                    help="keep re-reading until interrupted (like tail -f)")
+    ap.add_argument("--interval", type=float, default=5.0,
+                    help="seconds between --follow refreshes")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.path):
+        ap.error(f"no metrics file at {args.path}")
+
+    try:
+        print(render(args.path, args.tail))
+        while args.follow:
+            try:
+                time.sleep(max(args.interval, 0.1))
+            except KeyboardInterrupt:
+                break
+            print()
+            print(render(args.path, args.tail))
+    except BrokenPipeError:  # `watch ... | head` closing the pipe is fine
+        sys.stderr.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,7 @@
 """Request-level data-plane simulator (digital twin) — see
 docs/architecture.md, "Request-level simulator" and "Environment
 backends"."""
-from repro.sim.harness import sim_observe, simulate_fleet
+from repro.sim.harness import eval_fleet, sim_observe, simulate_fleet
 from repro.sim.metrics import hist_percentile, summarize, warn_if_censored
 from repro.sim.scenarios import SCENARIOS, make_scenario
 from repro.sim.state import (SimParams, SimState, action_caps,
@@ -10,7 +10,7 @@ from repro.sim.step import sim_interval, sim_interval_agent, sim_interval_ref
 
 __all__ = [
     "SCENARIOS", "SimParams", "SimState", "action_caps",
-    "effective_queue_cap", "hist_percentile", "make_scenario",
+    "effective_queue_cap", "eval_fleet", "hist_percentile", "make_scenario",
     "sim_init", "sim_interval", "sim_interval_agent", "sim_interval_ref",
     "sim_observe", "simulate_fleet", "spread_arrivals", "summarize",
     "warn_if_censored",

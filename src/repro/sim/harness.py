@@ -101,3 +101,15 @@ def simulate_fleet(cfg: FCPOConfig, sp: SimParams, params,
     summary = sim_metrics.summarize(state, sp)
     sim_metrics.warn_if_censored(summary, sp, stacklevel=3)
     return state, history, summary
+
+
+def eval_fleet(cfg: FCPOConfig, sp: SimParams, fleet, traces, key,
+               use_pallas: bool = False) -> Tuple[SimState, Dict, Dict]:
+    """``simulate_fleet`` for a trained fleet object: reads the stacked
+    policy/mask/device-profile leaves off anything Fleet-shaped
+    (``.astate.params`` / ``.masks`` / ``.env_params`` — duck-typed, so this
+    module never imports ``core.fleet``). The one request-grade evaluation
+    entry the leaderboard (``repro.eval``) and the benchmarks share."""
+    return simulate_fleet(cfg, sp, fleet.astate.params, fleet.masks,
+                          fleet.env_params, traces, key,
+                          use_pallas=use_pallas)

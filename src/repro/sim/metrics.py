@@ -42,6 +42,11 @@ def summarize(state: SimState, sp: SimParams) -> dict:
                           / jnp.maximum(completed, 1.0)),
         "throughput": completed / secs,
         "effective_throughput": state.effective.astype(jnp.float32) / secs,
+        # fraction of completions inside their per-request deadline — the
+        # leaderboard's SLO-attainment column (1.0 when nothing completed:
+        # an idle agent met every SLO it was given)
+        "slo_attainment": (state.effective.astype(jnp.float32)
+                           / jnp.maximum(completed, 1.0)),
         "drop_rate": (state.dropped.astype(jnp.float32)
                       / jnp.maximum(state.arrived.astype(jnp.float32), 1.0)),
         "mean_latency_s": (state.lat_sum / jnp.maximum(completed, 1.0)

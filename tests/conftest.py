@@ -6,5 +6,17 @@ assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
     "dry-run device-count override must not leak into tests"
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_collection_modifyitems(config, items):
+    # tier-1 stays fast: @pytest.mark.slow tests (full leaderboard grids,
+    # long horizons) only run when explicitly requested with RUN_SLOW=1.
+    if os.environ.get("RUN_SLOW") == "1":
+        return
+    skip = pytest.mark.skip(reason="slow: set RUN_SLOW=1 to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

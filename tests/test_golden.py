@@ -1,0 +1,81 @@
+"""Golden-metrics regression test: a tiny fixed-seed ``train_fleet_scan``
+run pinned against a checked-in history JSON.
+
+Silent numerics drift in core/fleet.py (a reordered reduction, a changed
+default, an accidental extra RNG split) shifts these numbers immediately —
+this test makes that a tier-1 failure instead of a surprise three PRs later.
+The tolerance is the repo's float32 fusion band (rtol=1e-4, atol=1e-5, same
+as the scan-vs-reference equivalence tests): loose enough for XLA version /
+CPU instruction-set differences, tight enough that any algorithmic change
+trips it.
+
+Regenerate (ONLY for an intentional, reviewed numerics change):
+  PYTHONPATH=src python tests/test_golden.py --regen
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.fleet import fleet_init, train_fleet_scan
+from repro.sim import make_scenario
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "fleet_history_golden.json")
+A, EPISODES, SEED = 4, 2, 0
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def run_pinned():
+    """The pinned run: A=4 agents, 2 episodes of the full cadence (one FL
+    round at fl_every=2), nominal scenario, default fluid backend and FL
+    transport, fixed seeds everywhere."""
+    cfg = FCPOConfig()
+    fleet = fleet_init(cfg, A, jax.random.PRNGKey(SEED))
+    traces = make_scenario("nominal", jax.random.PRNGKey(SEED + 1), A,
+                           EPISODES * cfg.n_steps)
+    _, hist = train_fleet_scan(cfg, fleet, traces, seed=SEED, donate=False)
+    return {k: [float(x) for x in np.asarray(v).ravel()]
+            for k, v in sorted(hist.items())}
+
+
+def test_history_matches_golden():
+    assert os.path.exists(GOLDEN_PATH), \
+        f"missing {GOLDEN_PATH} — regenerate with " \
+        f"PYTHONPATH=src python tests/test_golden.py --regen"
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    hist = run_pinned()
+    assert set(hist) == set(golden["history"]), \
+        "history metric keys changed — intentional? regenerate the golden"
+    for k, want in golden["history"].items():
+        got = hist[k]
+        np.testing.assert_allclose(
+            got, want, rtol=RTOL, atol=ATOL,
+            err_msg=f"history[{k!r}] drifted from the golden run "
+                    f"(regenerate ONLY for an intentional numerics change)")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite the golden JSON from the current code")
+    args = ap.parse_args()
+    if not args.regen:
+        ap.error("run under pytest, or pass --regen to rewrite the golden")
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    payload = {
+        "pinned": {"agents": A, "episodes": EPISODES, "seed": SEED,
+                   "scenario": "nominal", "backend": "fluid",
+                   "codec": "float32"},
+        "jax_version": jax.__version__,
+        "history": run_pinned(),
+    }
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")

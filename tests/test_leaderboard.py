@@ -1,0 +1,269 @@
+"""Standing eval harness (repro.eval): leaderboard cell determinism, the
+regression gate, envelope provenance, checkpoint restore, and the streaming
+metrics round-trip through launch/watch.py."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.fleet import fleet_init, train_fleet_scan
+from repro.eval.leaderboard import (Cell, GATE_METRICS, attach_deltas,
+                                    cell_seed, check_regressions,
+                                    evaluate_cell, grid_cells, load_fleet,
+                                    run_leaderboard)
+from repro.eval.stream import (MetricsSink, fl_round_summary, read_metrics,
+                               tail_summary)
+from repro.launch import train_fleet as train_fleet_cli
+from repro.launch import watch
+from repro.training import checkpoint as ckpt_mod
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)  # benchmarks/ is a repo-root namespace package
+
+from benchmarks import leaderboard as lb_cli  # noqa: E402
+from benchmarks.common import git_sha, load_bench, save_bench  # noqa: E402
+
+CFG = FCPOConfig()
+# tiny-but-real cell kwargs shared by every compute test in this module (the
+# jit cache makes repeat evaluations cheap once the first cell compiled)
+TINY = dict(episodes=2, eval_intervals=8, replicates=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return fleet_init(CFG, 2, jax.random.PRNGKey(0))
+
+
+def _assert_rows_identical(a, b):
+    assert a.keys() == b.keys()
+    for k in a:
+        assert a[k] == b[k], f"{k}: {a[k]} != {b[k]}"
+
+
+class TestDeterminism:
+    def test_cell_metrics_bit_identical_across_runs(self, fleet):
+        cell = Cell("steady", "fluid", "int8")
+        r1 = evaluate_cell(CFG, fleet, cell, **TINY)
+        r2 = evaluate_cell(CFG, fleet, cell, **TINY)
+        _assert_rows_identical(r1, r2)
+
+    def test_rows_independent_of_n_jobs_ordering(self, fleet):
+        cells = [Cell("steady", "fluid", "int8"),
+                 Cell("ood", "fluid", "float32"),
+                 Cell("steady", "fluid", "float32")]
+        seq = run_leaderboard(CFG, fleet, cells, n_jobs=1, **TINY)
+        striped = run_leaderboard(CFG, fleet, cells, n_jobs=2, **TINY)
+        assert [r["name"] for r in seq] == [c.name for c in cells]
+        for a, b in zip(seq, striped):
+            _assert_rows_identical(a, b)
+
+    def test_cell_seed_is_stable_and_per_cell(self):
+        c1 = Cell("steady", "fluid", "int8")
+        c2 = Cell("steady", "twin", "int8")
+        # crc32, not salted hash(): the value must be reproducible across
+        # processes — pin one
+        assert cell_seed(0, c1, 0) == cell_seed(0, c1, 0)
+        seeds = {cell_seed(0, c, r) for c in (c1, c2) for r in (0, 1)}
+        assert len(seeds) == 4  # distinct per (cell, replicate)
+        assert cell_seed(0, c1, 0, "eval") != cell_seed(0, c1, 0)
+
+    def test_grid_is_dense_and_ordered(self):
+        cells = grid_cells()
+        assert len(cells) == 9 * 2 * 3
+        assert len({c.name for c in cells}) == len(cells)
+        assert cells[0].scenario == cells[5].scenario  # scenario-major
+
+
+class TestGate:
+    def _rows(self):
+        return [{"name": "leaderboard_steady_fluid_int8",
+                 "reward_mean": 0.5, "eval_eff_mean": 40.0},
+                {"name": "leaderboard_ood_twin_topk",
+                 "reward_mean": -0.2, "eval_eff_mean": 20.0}]
+
+    def test_attach_deltas_and_pass_within_tol(self):
+        rows = self._rows()
+        prev = {"results": [dict(r) for r in rows]}
+        attach_deltas(rows, prev)
+        for r in rows:
+            for m in GATE_METRICS:
+                assert r[f"prev_{m}"] == r[m] and r[f"delta_{m}"] == 0.0
+        assert check_regressions(rows) == []
+
+    def test_regression_beyond_tol_fails_per_cell(self):
+        rows = self._rows()
+        prev = {"results": [dict(r) for r in rows]}
+        rows[0]["eval_eff_mean"] = 30.0  # 25% drop > 10% tol
+        attach_deltas(rows, prev)
+        fails = check_regressions(rows)
+        assert len(fails) == 1 and "eval_eff_mean" in fails[0]
+        assert "leaderboard_steady_fluid_int8" in fails[0]
+
+    def test_improvement_and_new_cells_never_fail(self):
+        rows = self._rows()
+        prev = {"results": [dict(rows[0])]}  # second cell is new
+        rows[0]["eval_eff_mean"] = 80.0  # improvement
+        attach_deltas(rows, prev)
+        assert "prev_reward_mean" not in rows[1]
+        assert check_regressions(rows) == []
+
+    def test_absolute_floor_absorbs_near_zero_noise(self):
+        rows = [{"name": "c", "reward_mean": -0.003, "eval_eff_mean": 1.0,
+                 "prev_reward_mean": 0.001, "prev_eval_eff_mean": 1.0}]
+        # drop of 0.004 < tol * floor(0.05) = 0.005 -> not a regression
+        assert check_regressions(rows) == []
+
+    def test_per_cell_tolerance_override(self):
+        rows = [{"name": "c", "reward_mean": 0.8, "eval_eff_mean": 40.0,
+                 "prev_reward_mean": 1.0, "prev_eval_eff_mean": 40.0}]
+        assert check_regressions(rows, tol=0.10)  # 20% drop fails at 10%
+        assert check_regressions(rows, tolerances={"c": 0.5}) == []
+
+
+class TestGateCLI:
+    """`benchmarks/leaderboard.py --gate` exits non-zero on an injected
+    regression — the acceptance criterion, end-to-end through the CLI."""
+    ARGS = ["--scenarios", "steady", "--backends", "fluid",
+            "--codecs", "int8", "--agents", "2", "--episodes", "2",
+            "--eval-intervals", "8", "--replicates", "1", "--gate"]
+
+    def test_gate_passes_then_fails_on_injected_regression(self, tmp_path):
+        out = ["--out-dir", str(tmp_path)]
+        assert lb_cli.main(self.ARGS + out) == 0  # first run: no prev
+        assert lb_cli.main(self.ARGS + out) == 0  # identical run: pass
+        env_path = tmp_path / "BENCH_leaderboard.json"
+        env = json.loads(env_path.read_text())
+        row = env["results"][0]
+        assert "delta_reward_mean" in row and row["delta_reward_mean"] == 0.0
+        # inject: pretend the previous run was much better
+        for r in env["results"]:
+            r["reward_mean"] += 1.0
+            r["eval_eff_mean"] *= 2.0
+        env_path.write_text(json.dumps(env))
+        assert lb_cli.main(self.ARGS + out) == 1
+
+    def test_envelope_has_grid_and_provenance(self, tmp_path):
+        assert lb_cli.main(self.ARGS + ["--out-dir", str(tmp_path)]) == 0
+        env = json.loads((tmp_path / "BENCH_leaderboard.json").read_text())
+        assert env["grid"] == {"scenarios": ["steady"],
+                               "backends": ["fluid"], "codecs": ["int8"]}
+        assert env["git_sha"] == git_sha()
+        assert env["jax_version"] == jax.__version__
+        row = env["results"][0]
+        for k in ("reward_mean", "reward_std", "eval_eff_mean",
+                  "eval_p99_mean", "eval_slo_mean", "fl_payload_bytes"):
+            assert k in row
+
+
+class TestEnvelopeProvenance:
+    def test_save_bench_stamps_sha_jax_backend(self, tmp_path):
+        path = save_bench("prov", [{"name": "x", "v": 1.0}],
+                          out_dir=str(tmp_path))
+        env = json.loads(open(path).read())
+        sha = git_sha()
+        assert env["git_sha"] == sha and len(sha) == 40
+        assert env["jax_version"] == jax.__version__
+        assert env["backend"] == jax.default_backend()
+        assert env["results"] == [{"name": "x", "v": 1.0}]
+
+    def test_load_bench_roundtrip_and_missing(self, tmp_path):
+        assert load_bench("prov", out_dir=str(tmp_path)) is None
+        save_bench("prov", [{"name": "x"}], out_dir=str(tmp_path),
+                   extra={"note": "hi"})
+        env = load_bench("prov", out_dir=str(tmp_path))
+        assert env["note"] == "hi" and env["name"] == "prov"
+
+    def test_git_sha_matches_head(self):
+        head = subprocess.run(["git", "rev-parse", "HEAD"], cwd=ROOT,
+                              capture_output=True, text=True).stdout.strip()
+        assert git_sha() == head
+
+
+class TestCheckpointEval:
+    def test_restored_fleet_scores_identically(self, fleet, tmp_path):
+        ckpt_mod.save(str(tmp_path), 7, fleet)
+        restored = load_fleet(CFG, str(tmp_path), n_agents=2)
+        cell = Cell("steady", "fluid", "float32")
+        _assert_rows_identical(evaluate_cell(CFG, fleet, cell, **TINY),
+                               evaluate_cell(CFG, restored, cell, **TINY))
+
+    def test_load_fleet_empty_dir_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError, match="no checkpoint"):
+            load_fleet(CFG, str(tmp_path), n_agents=2)
+
+
+class TestStreamingMetrics:
+    def test_scan_stream_matches_returned_history(self, fleet, tmp_path):
+        from repro.core.backends import get_backend
+        from repro.sim import make_scenario
+        path = str(tmp_path / "m.jsonl")
+        traces = make_scenario("steady", jax.random.PRNGKey(1), 2,
+                               3 * CFG.n_steps)
+        with MetricsSink(path, meta={"driver": "scan"}) as sink:
+            _, hist = train_fleet_scan(CFG, fleet, traces, seed=0,
+                                       donate=False,
+                                       env_backend=get_backend("fluid"),
+                                       metrics_sink=sink)
+        meta, records = read_metrics(path)
+        assert meta == {"driver": "scan"} and len(records) == 3
+        for e, rec in enumerate(records):
+            assert rec["episode"] == e
+            for k, v in rec.items():
+                if k != "episode":
+                    assert v == float(np.asarray(hist[k][e]))
+        assert tail_summary(records)["reward"]["last"] == \
+            float(np.asarray(hist["reward"][-1]))
+
+    def test_cli_metrics_out_roundtrips_through_watch(self, tmp_path, capsys):
+        path = str(tmp_path / "run.jsonl")
+        train_fleet_cli.main(["--agents", "2", "--episodes", "4",
+                              "--fl-codec", "int8", "--metrics-out", path])
+        capsys.readouterr()
+        watch.main([path, "--tail", "2"])
+        out = capsys.readouterr().out
+        assert "episodes recorded: 4" in out
+        assert "fl_codec=int8" in out and "reward" in out
+        assert "FL:" in out and "KB/round" in out
+        meta, records = read_metrics(path)
+        assert meta["agents"] == 2 and meta["driver"] == "scan"
+        fl = fl_round_summary(records)
+        assert fl is not None and fl["rounds"] == 2  # fl_every=2, 4 episodes
+
+    def test_read_metrics_tolerates_torn_tail(self, tmp_path):
+        path = str(tmp_path / "torn.jsonl")
+        with MetricsSink(path, meta={"a": 1}) as sink:
+            sink.append({"episode": 0, "reward": 1.0})
+        with open(path, "a") as f:
+            f.write('{"episode": 1, "rew')  # writer mid-append
+        meta, records = read_metrics(path)
+        assert meta == {"a": 1}
+        assert len(records) == 1 and records[0]["episode"] == 0
+
+    def test_watch_render_without_fl_rounds(self, tmp_path):
+        path = str(tmp_path / "nofl.jsonl")
+        with MetricsSink(path) as sink:
+            for e in range(3):
+                sink.append({"episode": e, "reward": 0.1 * e,
+                             "fl_payload_bytes": 0.0})
+        text = watch.render(path, tail_k=2)
+        assert "episodes recorded: 3" in text and "FL:" not in text
+
+
+@pytest.mark.slow
+class TestFullGrid:
+    """Full 9 x 2 x 3 grid (RUN_SLOW=1): every cell evaluates and the
+    envelope covers the whole grid."""
+
+    def test_full_grid_evaluates_every_cell(self, fleet):
+        rows = run_leaderboard(CFG, fleet, grid_cells(), **TINY)
+        assert len(rows) == 54
+        assert len({r["name"] for r in rows}) == 54
+        for r in rows:
+            assert np.isfinite([r["reward_mean"], r["eval_eff_mean"],
+                                r["eval_p99_mean"], r["eval_slo_mean"]]).all()

@@ -142,3 +142,102 @@ class TestScenarioLibrary:
         thirds = tr.reshape(6, 4, 100).mean(axis=2)
         assert (np.diff(thirds, axis=1) > 0).all()  # quarter means rise
         assert (thirds[:, -1] / thirds[:, 0] > 2.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests: the 4 newer generators (burst, diurnal,
+# flash-crowd, drift) across random seeds AND parameters — not just the one
+# fixed key above. Parameter ranges are chosen so the structural invariant
+# dominates the AR(1) noise band (stationary sd ~= 0.23 * scale, i.e. ~6%
+# of the rate level) and stays clear of the [1, 400] clip.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - hypothesis is in requirements-dev
+    st = None
+
+if st is not None:
+    HYP = dict(max_examples=15, deadline=None)
+
+    class TestGeneratorProperties:
+        @settings(**HYP)
+        @given(seed=st.integers(0, 2 ** 31 - 1),
+               base=st.floats(10.0, 80.0),
+               burst_scale=st.floats(2.0, 8.0))
+        def test_burst_bounded_finite_and_spiking(self, seed, base,
+                                                  burst_scale):
+            key = jax.random.PRNGKey(seed)
+            kw = dict(BURST, burst_scale=burst_scale)
+            tr = np.asarray(fleet_traces(key, 4, 240, base_rate=base, **kw))
+            assert tr.shape == (4, 240) and np.isfinite(tr).all()
+            assert (tr >= 1.0).all() and (tr <= 400.0).all()
+
+        @settings(**HYP)
+        @given(seed=st.integers(0, 2 ** 31 - 1))
+        def test_burst_prob_one_saturates_at_clip(self, seed):
+            tr = np.asarray(fleet_traces(jax.random.PRNGKey(seed), 2, 120,
+                                         base_rate=200.0, heterogeneity=0.0,
+                                         burst_prob=1.0, burst_scale=100.0))
+            assert tr.max() == 400.0  # every step bursts into the clip
+
+        @settings(**HYP)
+        @given(seed=st.integers(0, 2 ** 31 - 1),
+               base=st.floats(30.0, 80.0),
+               amp=st.floats(0.5, 0.85),
+               cycles=st.sampled_from([1.0, 2.0, 4.0]))
+        def test_diurnal_swing_and_periodicity(self, seed, base, amp,
+                                               cycles):
+            key = jax.random.PRNGKey(seed)
+            tr = np.asarray(diurnal_traces(key, 4, 240, base_rate=base,
+                                           amplitude=amp, cycles=cycles))
+            assert (tr >= 1.0).all() and (tr <= 400.0).all()
+            # swing depth tracks amplitude: the sinusoid's (1+a)/(1-a)
+            # peak/trough ratio, halved for noise/clip headroom
+            ratio = tr.max(axis=1) / tr.min(axis=1)
+            assert (ratio > 0.5 * (1 + amp) / (1 - amp)).all()
+            # periodicity: the dominant non-DC Fourier bin IS the cycle
+            # count (phase offsets move power between bins' real/imag
+            # parts, never off the cycle frequency)
+            spec = np.abs(np.fft.rfft(tr - tr.mean(axis=1, keepdims=True),
+                                      axis=1))
+            assert (spec[:, 1:].argmax(axis=1) + 1 == int(cycles)).all()
+
+        @settings(**HYP)
+        @given(seed=st.integers(0, 2 ** 31 - 1),
+               mult=st.floats(4.0, 8.0),
+               frac=st.floats(0.15, 0.35))
+        def test_flash_crowd_surge_segment_structure(self, seed, mult, frac):
+            n = 320
+            key = jax.random.PRNGKey(seed)
+            tr = np.asarray(flash_crowd_traces(key, 4, n, base_rate=25.0,
+                                               surge_mult=mult,
+                                               surge_frac=frac))
+            assert (tr >= 1.0).all() and (tr <= 400.0).all()
+            surge_len = int(n * frac)
+            for agent in tr:
+                # mult >= 4x with ~6% noise vs a ~1x baseline: 2x the
+                # trace median cleanly separates surge from base steps
+                hi = agent > 2.0 * np.median(agent)
+                assert 0.7 * surge_len <= hi.sum() <= 1.3 * surge_len
+                # ONE sustained surge, not scattered spikes
+                assert (np.diff(hi.astype(int)) == 1).sum() <= 2
+
+        @settings(**HYP)
+        @given(seed=st.integers(0, 2 ** 31 - 1),
+               start=st.floats(5.0, 25.0),
+               end_mult=st.floats(4.0, 10.0))
+        def test_drift_quarter_means_ramp_monotonically(self, seed, start,
+                                                        end_mult):
+            key = jax.random.PRNGKey(seed)
+            tr = np.asarray(drift_traces(key, 4, 320, start_rate=start,
+                                         end_rate=start * end_mult))
+            assert (tr >= 1.0).all() and (tr <= 400.0).all()
+            quarters = tr.reshape(4, 4, 80).mean(axis=2)
+            assert (np.diff(quarters, axis=1) > 0).all()
+            # total ramp magnitude survives the noise (per-agent jitter is
+            # a constant multiplier, so it cancels in the ratio)
+            assert (quarters[:, -1] / quarters[:, 0] > 0.3 * end_mult).all()
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_generator_properties():
+        pass
