@@ -31,7 +31,8 @@ from repro.core.backends import BACKENDS
 from repro.core.fleet import fleet_init
 from repro.eval.leaderboard import (DEFAULT_TOL, GRID_CODECS, REPLICATES,
                                     attach_deltas, check_regressions,
-                                    grid_cells, load_fleet, run_leaderboard)
+                                    grid_cells, load_fleet, run_leaderboard,
+                                    sanitize_envelope)
 from repro.sim import SCENARIOS
 
 # CI smoke slice: 2 scenarios x 2 backends x 2 codecs, 1 replicate — one
@@ -122,8 +123,14 @@ def main(argv=None) -> int:
                            n_jobs=args.n_jobs, log=print)
     print(f"grid wall {time.time() - t0:.1f}s")
 
-    prev = load_bench(name, out_dir=args.out_dir)
-    attach_deltas(rows, prev)
+    try:
+        prev = load_bench(name, out_dir=args.out_dir)
+    except Exception as e:  # truncated/corrupt previous envelope
+        print(f"warning: previous envelope unreadable ({e}) — "
+              f"treating as no baseline")
+        prev = None
+    prev = sanitize_envelope(prev, warn=print)
+    attach_deltas(rows, prev, warn=print)
     path = save_bench(name, rows, out_dir=args.out_dir, extra={
         "grid": {"scenarios": list(scenarios), "backends": list(backends),
                  "codecs": list(codecs)},

@@ -143,5 +143,5 @@ def crl_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
     else:
         metrics = {**metrics, "loss": jnp.zeros(()), "l_p": jnp.zeros(()),
                    "l_v": jnp.zeros(()), "l_pen": jnp.zeros(()),
-                   "gated": jnp.ones(())}
+                   "gated": jnp.ones(()), "update_rejected": jnp.zeros(())}
     return astate, rollout, metrics

@@ -95,6 +95,61 @@ def select_clients(cfg: FCPOConfig, stats: ClientStats) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # Algorithm 1 — agent-specific aggregation over stacked fleets
 # ---------------------------------------------------------------------------
+AGG_METHODS = ("mean", "trimmed", "median")
+
+
+def _gather_rank(srt, rank):
+    """srt: (S, M, ...) sorted along axis 1; rank: (S,) int. Returns the
+    rank-th entry of each segment row, shape (S, ...)."""
+    idx = rank.reshape((rank.shape[0], 1) + (1,) * (srt.ndim - 2))
+    idx = jnp.broadcast_to(idx, (rank.shape[0], 1) + srt.shape[2:])
+    return jnp.take_along_axis(srt, idx, axis=1)[:, 0]
+
+
+def _robust_stat(vals, valid, method: str, trim_frac: float):
+    """Coordinate-wise robust statistic over each segment row.
+
+    vals: (S, M, ...) candidate contributions; valid: (S, M) bool. Invalid
+    entries are pushed to +inf, so after the per-coordinate sort ranks
+    [0, n) with n = valid-count are exactly the valid entries. ``median``
+    is the usual odd/even-average; ``trimmed`` is the mean of ranks
+    [t, n − t) with t = floor(trim_frac · n) (t < n − t for any
+    trim_frac < 0.5 and n ≥ 1). Callers guarantee n ≥ 1 per segment (the
+    base network is always a valid participant)."""
+    vb = valid.reshape(valid.shape + (1,) * (vals.ndim - 2))
+    srt = jnp.sort(jnp.where(vb, vals, jnp.inf), axis=1)
+    n = jnp.sum(valid, axis=1)
+    if method == "median":
+        lo = _gather_rank(srt, jnp.maximum((n - 1) // 2, 0))
+        hi = _gather_rank(srt, n // 2)
+        return 0.5 * (lo + hi)
+    if method == "trimmed":
+        t = jnp.floor(trim_frac * n).astype(n.dtype)
+        ranks = jnp.arange(vals.shape[1])
+        inc = (ranks[None, :] >= t[:, None]) & (ranks[None, :] < (n - t)[:, None])
+        incb = inc.reshape(inc.shape + (1,) * (vals.ndim - 2))
+        kept = jnp.maximum(n - 2 * t, 1).astype(vals.dtype)
+        denom = kept.reshape((n.shape[0],) + (1,) * (vals.ndim - 2))
+        return jnp.sum(jnp.where(incb, srt, 0.0), axis=1) / denom
+    raise ValueError(f"unknown robust method {method!r}")
+
+
+def _robust_masked_with_base(stacked, base, sel, pod_ids, n_pods,
+                             method: str, trim_frac: float):
+    """Robust counterpart of ``_masked_mean_with_base``: the per-pod
+    coordinate-wise statistic over {selected clients of the pod} ∪ {the
+    pod's base network}. Degenerates to the base network for an empty
+    selection, like the mean path."""
+    valid = sel[None, :] & (pod_ids[None, :] == jnp.arange(n_pods)[:, None])
+    vals = jnp.concatenate(
+        [jnp.broadcast_to(stacked[None], (n_pods,) + stacked.shape),
+         base[:, None]], axis=1)
+    valid = jnp.concatenate(
+        [valid, jnp.ones((n_pods, 1), bool)], axis=1)
+    agg = _robust_stat(vals, valid, method, trim_frac)
+    return agg[pod_ids], agg
+
+
 def _masked_mean_with_base(stacked, base, sel, pod_ids, n_pods):
     """(base + Σ_sel m) / (n_sel + 1), per pod segment.
 
@@ -124,26 +179,47 @@ def _head_weights(sel, losses_h, group_ids, n_groups):
 
 def aggregate(cfg: FCPOConfig, fleet_params, base_params, sel: jnp.ndarray,
               head_losses: jnp.ndarray, head_groups: Dict[str, jnp.ndarray],
-              pod_ids: Optional[jnp.ndarray] = None, n_pods: int = 1
+              pod_ids: Optional[jnp.ndarray] = None, n_pods: int = 1,
+              method: str = "mean", trim_frac: float = 0.2
               ) -> Tuple[Any, Any]:
     """Run Algorithm 1. Returns (new_fleet_params, new_base_params).
 
     fleet_params: stacked (A, ...); base_params: (P, ...) per-pod base
     networks; head_losses: (A, 3); head_groups: per head key -> (A,) int32
     group ids (agents sharing an action-space signature); pod_ids: (A,).
+
+    ``method`` (static): ``"mean"`` is the paper's equal/loss-weighted
+    aggregation — the exact pre-chaos code path, bit-for-bit.
+    ``"trimmed"``/``"median"`` replace every segment mean with the
+    coordinate-wise robust statistic over {selected clients} ∪ {base}
+    (byzantine tolerance: any f corrupt clients with f ≤ the trim budget
+    cannot push a coordinate outside the honest range). Robust head
+    aggregation drops the loss weighting — rank statistics already bound
+    influence, and a byzantine client could game reported losses anyway.
     """
+    if method not in AGG_METHODS:
+        raise ValueError(f"unknown aggregation method {method!r}; expected "
+                         f"one of {AGG_METHODS}")
     a = sel.shape[0]
     if pod_ids is None:
         pod_ids = jnp.zeros((a,), jnp.int32)
+    robust = method != "mean"
 
     new_fleet = {}
     new_base = {}
 
     # --- backbone + value: equal aggregation (lines 3-7, 12) ---
     for key in BACKBONE_KEYS:
-        out = jax.tree.map(
-            lambda st, b: _masked_mean_with_base(st, b, sel, pod_ids, n_pods),
-            fleet_params[key], base_params[key])
+        if robust:
+            out = jax.tree.map(
+                lambda st, b: _robust_masked_with_base(
+                    st, b, sel, pod_ids, n_pods, method, trim_frac),
+                fleet_params[key], base_params[key])
+        else:
+            out = jax.tree.map(
+                lambda st, b: _masked_mean_with_base(st, b, sel, pod_ids,
+                                                     n_pods),
+                fleet_params[key], base_params[key])
         new_fleet[key] = jax.tree.map(lambda t: t[0], out,
                                       is_leaf=lambda t: isinstance(t, tuple))
         new_base[key] = jax.tree.map(lambda t: t[1], out,
@@ -161,12 +237,23 @@ def aggregate(cfg: FCPOConfig, fleet_params, base_params, sel: jnp.ndarray,
 
         def agg_leaf(st, b):
             wshape = (-1,) + (1,) * (st.ndim - 1)
-            ssum = jax.ops.segment_sum(st * wts.reshape(wshape), seg, n_seg)
             cnt = jax.ops.segment_sum(sel.astype(jnp.float32), seg, n_seg)
             # base head is per pod; broadcast to every group in that pod
             b_seg = jnp.repeat(b, n_groups_local, axis=0)
-            denom = (cnt + 1.0).reshape((n_seg,) + (1,) * (st.ndim - 1))
-            agg = (b_seg + ssum) / denom                    # (n_seg, ...)
+            if robust:
+                valid = (sel[None, :]
+                         & (seg[None, :] == jnp.arange(n_seg)[:, None]))
+                vals = jnp.concatenate(
+                    [jnp.broadcast_to(st[None], (n_seg,) + st.shape),
+                     b_seg[:, None]], axis=1)
+                v2 = jnp.concatenate(
+                    [valid, jnp.ones((n_seg, 1), bool)], axis=1)
+                agg = _robust_stat(vals, v2, method, trim_frac)
+            else:
+                ssum = jax.ops.segment_sum(st * wts.reshape(wshape), seg,
+                                           n_seg)
+                denom = (cnt + 1.0).reshape((n_seg,) + (1,) * (st.ndim - 1))
+                agg = (b_seg + ssum) / denom                # (n_seg, ...)
             per_agent = agg[seg]
             # groups with no contributor keep the agent's own head
             has = (cnt[seg] > 0).reshape(wshape)
@@ -184,11 +271,27 @@ def aggregate(cfg: FCPOConfig, fleet_params, base_params, sel: jnp.ndarray,
     return new_fleet, new_base
 
 
-def merge_pods(base_params):
+def merge_pods(base_params, active=None):
     """Hierarchical FL (§IV-D Large-Scale): cross-cluster exchange through
-    the cloud — pods' base networks are averaged and redistributed."""
+    the cloud — pods' base networks are averaged and redistributed.
+
+    ``active`` ((P,) bool, optional) models network partitions: only active
+    pods contribute to and receive the cloud average; a partitioned pod
+    keeps its own base network until it rejoins. ``active=None`` is the
+    original all-pods merge (identical program)."""
+    if active is None:
+        def mix(b):
+            return jnp.broadcast_to(b.mean(0, keepdims=True), b.shape)
+        return jax.tree.map(mix, base_params)
+
+    n_act = jnp.maximum(jnp.sum(active), 1)
+
     def mix(b):
-        return jnp.broadcast_to(b.mean(0, keepdims=True), b.shape)
+        w = active.reshape((-1,) + (1,) * (b.ndim - 1))
+        m = jnp.sum(jnp.where(w, b, 0.0), axis=0, keepdims=True) \
+            / n_act.astype(b.dtype)
+        return jnp.where(w, jnp.broadcast_to(m, b.shape), b)
+
     return jax.tree.map(mix, base_params)
 
 

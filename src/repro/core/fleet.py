@@ -43,6 +43,11 @@ from repro.fl import codec as fl_codec
 from repro.fl import staleness as fl_stale
 from repro.fl import transport as fl_transport
 from repro.fl.transport import DEFAULT_TRANSPORT, TransportConfig
+from repro.resilience import faults as rfaults
+from repro.resilience.faults import FaultConfig
+from repro.resilience.guards import DEFAULT_GUARDS, GuardConfig
+from repro.resilience.guards import clip_deltas as guard_clip_deltas
+from repro.resilience.guards import finite_mask as guard_finite_mask
 
 
 @jax.tree_util.register_pytree_node_class
@@ -52,11 +57,11 @@ class Fleet:
 
     FIELDS = ("astate", "base_params", "env_params", "masks", "group_ids",
               "pod_ids", "bandwidth", "speeds", "episode", "residuals",
-              "pending")
+              "pending", "crash_timer", "partition_timer")
 
     def __init__(self, astate, base_params, env_params, masks, group_ids,
-                 pod_ids, bandwidth, speeds, episode, residuals, pending, *,
-                 n_pods, group_counts):
+                 pod_ids, bandwidth, speeds, episode, residuals, pending,
+                 crash_timer, partition_timer, *, n_pods, group_counts):
         self.astate: AgentState = astate
         self.base_params = base_params
         self.env_params: env_mod.EnvParams = env_params
@@ -72,6 +77,12 @@ class Fleet:
         # the donated scan (zero host work per round).
         self.residuals = residuals
         self.pending: fl_stale.PendingDeltas = pending
+        # Chaos layer state: per-agent crash-recovery countdown (episodes a
+        # crashed agent stays down) and per-pod partition countdown (merge
+        # events a partitioned pod skips) — in the pytree so fault injection
+        # stays inside the donated scan. All-zeros when faults are off.
+        self.crash_timer = crash_timer
+        self.partition_timer = partition_timer
         self.n_pods: int = n_pods
         self.group_counts: Dict[str, int] = group_counts
 
@@ -109,7 +120,7 @@ def fleet_shardings(fleet: Fleet, mesh) -> Fleet:
     vals = {}
     for f in Fleet.FIELDS:
         v = getattr(fleet, f)
-        if f == "base_params":
+        if f in ("base_params", "partition_timer"):
             vals[f] = jax.tree.map(pod, v)
         elif f == "episode":
             vals[f] = NamedSharding(mesh, P())
@@ -166,6 +177,8 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
                   pod_ids, bandwidth, speeds, jnp.zeros((), jnp.int32),
                   fl_codec.residuals_init(params),
                   fl_stale.pending_init(params),
+                  jnp.zeros((n_agents,), jnp.int32),
+                  jnp.zeros((n_pods,), jnp.int32),
                   n_pods=n_pods, group_counts=group_counts)
     if mesh is not None:
         fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
@@ -185,9 +198,13 @@ def fleet_episode(cfg: FCPOConfig, fleet: Fleet, rates: jnp.ndarray,
     return fleet, rollouts, metrics
 
 
-@partial(jax.jit, static_argnums=0, static_argnames=("transport",))
+@partial(jax.jit, static_argnums=0,
+         static_argnames=("transport", "guards", "faults"))
 def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
-             transport: Optional[TransportConfig] = None):
+             transport: Optional[TransportConfig] = None,
+             guards: Optional[GuardConfig] = None,
+             faults: Optional[FaultConfig] = None,
+             byzantine=None, fault_key=None):
     """One federated round: transport -> Eq. 7 selection -> Alg. 1
     aggregation -> Alg. 2 head fine-tuning.
 
@@ -201,16 +218,36 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
     later round staleness-discounted. The default transport (float32 codec,
     no deadline, sync) compiles to the exact pre-transport round.
 
+    ``guards`` (jit-static, ``repro.resilience.GuardConfig``) selects the
+    Algorithm 1 statistic (mean / trimmed / median), an optional per-leaf
+    delta norm clip, and the non-finite contribution rejection. ``faults``
+    + ``byzantine`` ((A,) bool) + ``fault_key`` inject byzantine corruption
+    into the decoded deltas, post-codec. The defaults (no faults, mean
+    aggregation, guards on) compile to the exact pre-chaos round.
+
     Returns (fleet, sel, fl_metrics) where ``sel`` is the (A,) aggregation
-    mask and ``fl_metrics`` the per-round communication metrics
+    mask and ``fl_metrics`` the per-round communication/defense metrics
     (``repro.fl.transport.FL_METRIC_KEYS``)."""
     transport = DEFAULT_TRANSPORT if transport is None else transport
+    guards = DEFAULT_GUARDS if guards is None else guards
+    byz_on = faults is not None and faults.byzantine_active
     a = fleet.pod_ids.shape[0]
     if available is None:
         available = jnp.ones((a,), bool)
+    if byz_on and byzantine is None:
+        byzantine = jnp.zeros((a,), bool)
     legacy_avail = available
     params = fleet.astate.params
     pending = fleet.pending
+    rejected = jnp.zeros((), jnp.float32)
+    clipped = jnp.zeros((), jnp.float32)
+
+    # Parked uploads are validated before anything reads them (selection
+    # included): a poisoned delta parked in an earlier round must not make
+    # its offline owner selectable nor resurface into aggregation.
+    if guards.reject_nonfinite and transport.async_rounds:
+        pending, n_dropped = fl_stale.validate_pending(pending)
+        rejected = rejected + n_dropped
 
     # --- communication model: payload sizes are static, links are per-agent
     up_bytes = fl_transport.agent_payload_bytes(params, transport,
@@ -246,19 +283,33 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
     )(params, rollouts, fleet.masks)
 
     # --- reconstruct the server-side view of each client's parameters
-    if transport.plain:
-        # lossless codec, nothing parked: base + (params - base) == params
-        # identically — skip the delta machinery so the default config is
-        # bit-for-bit the pre-transport program.
+    if transport.plain and not byz_on and guards.clip_factor <= 0:
+        # lossless codec, nothing parked, nothing corrupted or clipped in
+        # transit: base + (params - base) == params identically — skip the
+        # delta machinery so the default config is bit-for-bit the
+        # pre-transport program.
         recon, sel_agg = params, sel
         residuals, new_pending = fleet.residuals, pending
         transmitted = sel
         stale_used = jnp.zeros((), jnp.float32)
+        if guards.reject_nonfinite:
+            # identity on healthy params; a wedged client (NaN'd by its own
+            # training) drops out of aggregation instead of poisoning it
+            ok = guard_finite_mask(params)
+            rejected = rejected + jnp.sum(sel & ~ok).astype(jnp.float32)
+            sel_agg = sel & ok
     else:
         base_g = jax.tree.map(lambda b: b[fleet.pod_ids], fleet.base_params)
         delta = jax.tree.map(jnp.subtract, params, base_g)
         decoded, res_next = fl_codec.codec_roundtrip(delta, fleet.residuals,
                                                      transport)
+        if byz_on:
+            # corruption happens in transit, AFTER the honest client
+            # encoded its delta and committed error feedback — the server
+            # sees garbage, the client's own state stays consistent
+            key = (fault_key if fault_key is not None
+                   else jax.random.PRNGKey(faults.seed))
+            decoded = rfaults.corrupt_deltas(faults, decoded, byzantine, key)
         if transport.async_rounds:
             w_stale = fl_stale.stale_weights(pending,
                                              transport.staleness_decay)
@@ -278,6 +329,14 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
             transmitted = sel
             new_pending = pending
             stale_used = jnp.zeros((), jnp.float32)
+        # --- server-side defenses on the merged wire contributions ---
+        if guards.reject_nonfinite:
+            ok = guard_finite_mask(contrib)
+            rejected = rejected + jnp.sum(sel_agg & ~ok).astype(jnp.float32)
+            sel_agg = sel_agg & ok
+        if guards.clip_factor > 0:
+            contrib, clipped = guard_clip_deltas(contrib, sel_agg,
+                                                 guards.clip_factor)
         # only selected contributors are seen through the wire; everyone
         # else enters aggregation with their TRUE params, so Alg. 1's
         # no-contributor fallback ("groups with no contributor keep the
@@ -297,7 +356,8 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
 
     new_params, new_base = fed.aggregate(
         cfg, recon, fleet.base_params, sel_agg, head_losses,
-        fleet.head_groups, fleet.pod_ids, fleet.n_pods)
+        fleet.head_groups, fleet.pod_ids, fleet.n_pods,
+        method=guards.agg, trim_frac=guards.trim_frac)
 
     # Algorithm 2: local action-head fine-tuning on local experiences
     params, opt = jax.vmap(
@@ -316,16 +376,41 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
         / jnp.maximum(n_up, 1.0),
         "fl_missed": jnp.sum(legacy_avail & ~on_time).astype(jnp.float32),
         "fl_stale_used": stale_used,
+        "fl_rejected": rejected,
+        "fl_clipped": clipped,
     }
     fleet = fleet._replace(astate=astate, base_params=new_base,
                            residuals=residuals, pending=new_pending)
     return fleet, sel_agg, fl_metrics
 
 
-@partial(jax.jit, static_argnums=0)
-def pod_merge(cfg: FCPOConfig, fleet: Fleet):
-    """Hierarchical cross-pod exchange (cloud tier)."""
-    return fleet._replace(base_params=fed.merge_pods(fleet.base_params))
+@partial(jax.jit, static_argnums=0, static_argnames=("faults",))
+def pod_merge(cfg: FCPOConfig, fleet: Fleet, partition=None,
+              faults: Optional[FaultConfig] = None):
+    """Hierarchical cross-pod exchange (cloud tier).
+
+    With partition faults active, ``partition`` ((P,) bool) is this merge
+    event's fresh partition draws: a newly partitioned pod drops off the
+    cloud tier for ``faults.partition_merges`` merge events (its base
+    network drifts alone — only active pods average and redistribute),
+    then rejoins. The default (no faults) is the original all-pods merge."""
+    if faults is None or not faults.partition_active or partition is None:
+        return fleet._replace(base_params=fed.merge_pods(fleet.base_params))
+    timer = jnp.maximum(fleet.partition_timer - 1, 0)
+    timer = jnp.where(partition, faults.partition_merges, timer)
+    active = timer == 0
+    return fleet._replace(base_params=fed.merge_pods(fleet.base_params,
+                                                     active),
+                          partition_timer=timer)
+
+
+def _normalize_chaos(faults, guards):
+    """Map inactive fault configs to None and a None guard config to the
+    default — maximizes jit-cache identity with pre-chaos call sites."""
+    if faults is not None and not faults.active:
+        faults = None
+    guards = DEFAULT_GUARDS if guards is None else guards
+    return faults, guards
 
 
 def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
@@ -333,33 +418,84 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                           straggler_prob: float = 0.0, seed: int = 0,
                           env_backend=None,
                           transport: Optional[TransportConfig] = None,
-                          metrics_sink=None):
+                          metrics_sink=None,
+                          faults: Optional[FaultConfig] = None,
+                          guards: Optional[GuardConfig] = None,
+                          episode_offset: int = 0,
+                          total_episodes: Optional[int] = None):
     """The original Python-loop driver: one host dispatch per episode plus a
     per-metric host sync — O(n_episodes) dispatches. Kept as the equivalence
-    oracle for ``train_fleet_scan`` (same seeds => same straggler draws).
-    ``metrics_sink`` gets the same per-episode records as the scan driver's
-    streaming tap, appended directly from the loop."""
+    oracle for ``train_fleet_scan`` (same seeds => same straggler draws,
+    same fault plan). ``metrics_sink`` gets the same per-episode records as
+    the scan driver's streaming tap, appended directly from the loop.
+    ``faults``/``guards``/``episode_offset``/``total_episodes`` mirror
+    ``train_fleet_scan``."""
     backend = get_backend(env_backend)
     transport = DEFAULT_TRANSPORT if transport is None else transport
+    faults, guards = _normalize_chaos(faults, guards)
     a, total = traces.shape
     n_eps = total // cfg.n_steps
+    total_eps = (episode_offset + n_eps if total_episodes is None
+                 else total_episodes)
+    if total_eps < episode_offset + n_eps:
+        raise ValueError(f"total_episodes={total_eps} < episode_offset="
+                         f"{episode_offset} + {n_eps} trace episodes")
+    schedule = fed.fl_schedule(cfg, total_eps, federated=federated,
+                               learn=learn)
+    plan = rfaults.draw_fault_plan(schedule, a, fleet.n_pods, faults)
+    crash_on = faults is not None and faults.crash_active
+    byz_on = faults is not None and faults.byzantine_active
+    part_on = faults is not None and faults.partition_active
     rng = np.random.default_rng(seed)
     history: Dict[str, list] = {}
-    rounds = 0
-    for e in range(n_eps):
-        rates = traces[:, e * cfg.n_steps:(e + 1) * cfg.n_steps]
+    rounds = int(schedule[:episode_offset].sum())
+    for e in range(episode_offset):  # burn the pre-offset straggler draws
+        if schedule[e]:
+            rng.random(a)
+    for e in range(episode_offset, episode_offset + n_eps):
+        i = e - episode_offset
+        rates = traces[:, i * cfg.n_steps:(i + 1) * cfg.n_steps]
+        prev_astate = fleet.astate
         fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates,
                                                  learn=learn, backend=backend)
+        ran = None
+        if crash_on:
+            fleet, ran, down = rfaults.apply_crashes(
+                faults, prev_astate, fleet, jnp.asarray(plan.crash[e]))
         fl_metrics = fl_transport.fl_zero_metrics()
-        if federated and learn and (e + 1) % cfg.fl_every == 0:
+        if schedule[e]:
             avail = jnp.asarray(rng.random(a) >= straggler_prob)
-            fleet, _, fl_metrics = fl_round(cfg, fleet, rollouts, avail,
-                                            transport=transport)
+            if crash_on:
+                avail = avail & ~down
+            fkey = (jax.random.fold_in(jax.random.PRNGKey(faults.seed), e)
+                    if byz_on else None)
+            pre_round = fleet.astate
+            fleet, _, fl_metrics = fl_round(
+                cfg, fleet, rollouts, avail, transport=transport,
+                guards=guards, faults=faults,
+                byzantine=jnp.asarray(plan.byzantine[e]) if byz_on else None,
+                fault_key=fkey)
+            if crash_on:
+                # a down agent is offline: it must not receive the round's
+                # new model (it rejoins later via the step-① warm start)
+                fleet = fleet._replace(astate=rfaults.freeze_astate(
+                    down, pre_round, fleet.astate))
             rounds += 1
             if rounds % cfg.hierarchical_period == 0 and fleet.n_pods > 1:
-                fleet = pod_merge(cfg, fleet)
-        ep_metrics = {k: float(np.asarray(v).mean())
-                      for k, v in {**metrics, **fl_metrics}.items()}
+                fleet = pod_merge(
+                    cfg, fleet,
+                    jnp.asarray(plan.partition[e]) if part_on else None,
+                    faults=faults if part_on else None)
+        if ran is None:
+            ep_metrics = {k: float(np.asarray(v).mean())
+                          for k, v in metrics.items()}
+        else:  # alive-weighted: a frozen agent's episode did not happen
+            w = np.asarray(ran, np.float64)
+            d = max(w.sum(), 1.0)
+            ep_metrics = {k: float((np.asarray(v) * w).sum() / d)
+                          for k, v in metrics.items()}
+        ep_metrics.update({k: float(np.asarray(v))
+                           for k, v in fl_metrics.items()})
         for k, v in ep_metrics.items():
             history.setdefault(k, []).append(v)
         if metrics_sink is not None:
@@ -403,34 +539,69 @@ def _sink_emit(names, sink_id, episode, values):
 # ---------------------------------------------------------------------------
 def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
                  avail: jnp.ndarray, do_fl: jnp.ndarray, ep_idx: jnp.ndarray,
-                 sink_id: jnp.ndarray, learn: bool, backend: EnvBackend,
-                 transport: TransportConfig, stream: bool):
+                 sink_id: jnp.ndarray, crash_eps: jnp.ndarray,
+                 byz_eps: jnp.ndarray, part_eps: jnp.ndarray,
+                 rounds0: jnp.ndarray, learn: bool, backend: EnvBackend,
+                 transport: TransportConfig,
+                 faults: Optional[FaultConfig],
+                 guards: GuardConfig, stream: bool):
     """Scan body host fn. rates_eps: (n_eps, A, n_steps); avail/do_fl/ep_idx:
-    pre-drawn availability bits, FL schedule, and episode indices, consumed
-    as scan xs. ``stream`` (static) taps every episode's metrics out to the
-    registered sink ``sink_id`` via an ordered host callback — the run is
-    still ONE dispatch, but the sink's JSONL file tails live."""
+    pre-drawn availability bits, FL schedule, and (absolute) episode
+    indices, consumed as scan xs. crash_eps/byz_eps/part_eps: the pre-drawn
+    fault plan (``resilience.draw_fault_plan``), also scan xs — dead code
+    when ``faults`` (static) is None. ``rounds0`` seeds the FL-round
+    counter so a resumed chunk keeps the hierarchical-merge cadence.
+    ``stream`` (static) taps every episode's metrics out to the registered
+    sink ``sink_id`` via an ordered host callback — the run is still ONE
+    dispatch, but the sink's JSONL file tails live."""
+    crash_on = faults is not None and faults.crash_active
+    byz_on = faults is not None and faults.byzantine_active
+    part_on = faults is not None and faults.partition_active
 
     def body(carry, xs):
         flt, rounds = carry
-        rates, av, fl, ep_i = xs
+        rates, av, fl, ep_i, crash, byz, px = xs
+        prev_astate = flt.astate
         flt, rollouts, metrics = fleet_episode(cfg, flt, rates, learn=learn,
                                                backend=backend)
+        ran = down = None
+        if crash_on:
+            flt, ran, down = rfaults.apply_crashes(faults, prev_astate, flt,
+                                                   crash)
+            av = av & ~down
 
         def with_fl(op):
             f, rnd = op
-            f, _, flm = fl_round(cfg, f, rollouts, av, transport=transport)
+            fkey = (jax.random.fold_in(jax.random.PRNGKey(faults.seed), ep_i)
+                    if byz_on else None)
+            pre_round = f.astate
+            f, _, flm = fl_round(cfg, f, rollouts, av, transport=transport,
+                                 guards=guards, faults=faults,
+                                 byzantine=byz if byz_on else None,
+                                 fault_key=fkey)
+            if crash_on:
+                # a down agent is offline: it must not receive the round's
+                # new model (it rejoins later via the step-① warm start)
+                f = f._replace(astate=rfaults.freeze_astate(
+                    down, pre_round, f.astate))
             rnd = rnd + 1
             if f.n_pods > 1:
+                merge = (lambda g: pod_merge(cfg, g, px, faults=faults)) \
+                    if part_on else (lambda g: pod_merge(cfg, g))
                 f = jax.lax.cond(rnd % cfg.hierarchical_period == 0,
-                                 lambda g: pod_merge(cfg, g), lambda g: g, f)
+                                 merge, lambda g: g, f)
             return (f, rnd), flm
 
         def no_fl(op):
             return op, fl_transport.fl_zero_metrics()
 
         (flt, rounds), flm = jax.lax.cond(fl, with_fl, no_fl, (flt, rounds))
-        ep_metrics = {k: v.mean() for k, v in metrics.items()}
+        if ran is None:
+            ep_metrics = {k: v.mean() for k, v in metrics.items()}
+        else:  # alive-weighted: a frozen agent's episode did not happen
+            w = ran.astype(jnp.float32)
+            d = jnp.maximum(jnp.sum(w), 1.0)
+            ep_metrics = {k: jnp.sum(v * w) / d for k, v in metrics.items()}
         ep_metrics.update(flm)
         if stream:
             names = tuple(sorted(ep_metrics))
@@ -440,8 +611,8 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
         return (flt, rounds), ep_metrics
 
     (fleet, _), history = jax.lax.scan(
-        body, (fleet, jnp.zeros((), jnp.int32)),
-        (rates_eps, avail, do_fl, ep_idx))
+        body, (fleet, rounds0),
+        (rates_eps, avail, do_fl, ep_idx, crash_eps, byz_eps, part_eps))
     return fleet, history
 
 
@@ -450,7 +621,7 @@ _SCAN_FNS: Dict[bool, Any] = {}
 
 def _scan_fn(donate: bool):
     if donate not in _SCAN_FNS:
-        kw = dict(static_argnums=(0, 7, 8, 9, 10))
+        kw = dict(static_argnums=(0, 11, 12, 13, 14, 15, 16))
         if donate:
             kw["donate_argnums"] = (1,)
         _SCAN_FNS[donate] = jax.jit(_scan_driver, **kw)
@@ -463,7 +634,11 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                      mesh=None, donate: Optional[bool] = None,
                      env_backend=None,
                      transport: Optional[TransportConfig] = None,
-                     metrics_sink=None):
+                     metrics_sink=None,
+                     faults: Optional[FaultConfig] = None,
+                     guards: Optional[GuardConfig] = None,
+                     episode_offset: int = 0,
+                     total_episodes: Optional[int] = None):
     """Scanned fleet driver: episodes over ``traces`` (A, total_steps), FL
     every ``fl_every`` episodes (stragglers masked by pre-drawn availability
     bits), cross-pod merge every ``hierarchical_period`` rounds — all inside
@@ -488,20 +663,48 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     out of the scan through an ordered host callback as they complete, so a
     long run is observable live (``launch/watch.py``) while still being ONE
     dispatch. Off (None) by default, in which case the traced program is
-    exactly the sink-free one. Returns (fleet, history) with history as
-    per-episode numpy arrays, fetched in a single device->host transfer."""
+    exactly the sink-free one.
+    ``faults``: a jit-static ``repro.resilience.FaultConfig`` — injected
+    crashes / byzantine deltas / pod partitions, pre-drawn on host
+    (``draw_fault_plan``) and consumed as scan xs, so the chaos run is
+    still ONE jitted scan. ``guards``: a jit-static
+    ``repro.resilience.GuardConfig`` — robust aggregation / delta clipping
+    / non-finite rejection. The defaults compile to the exact pre-chaos
+    program, bit-for-bit seed-for-seed.
+    ``episode_offset``/``total_episodes``: run episodes
+    [offset, offset + traces-episodes) of a ``total_episodes``-long
+    schedule — straggler draws, fault plans, FL cadence, and the
+    hierarchical-merge counter all follow the *absolute* episode index, so
+    a run chunked across checkpoint save/restore boundaries is
+    value-identical to the uninterrupted run.
+    Returns (fleet, history) with history as per-episode numpy arrays,
+    fetched in a single device->host transfer."""
     backend = get_backend(env_backend)
     transport = DEFAULT_TRANSPORT if transport is None else transport
+    faults, guards = _normalize_chaos(faults, guards)
     a, total = traces.shape
     n_eps = total // cfg.n_steps
-    schedule = fed.fl_schedule(cfg, n_eps, federated=federated, learn=learn)
+    total_eps = (episode_offset + n_eps if total_episodes is None
+                 else total_episodes)
+    if total_eps < episode_offset + n_eps:
+        raise ValueError(f"total_episodes={total_eps} < episode_offset="
+                         f"{episode_offset} + {n_eps} trace episodes")
+    schedule = fed.fl_schedule(cfg, total_eps, federated=federated,
+                               learn=learn)
     avail = fed.draw_availability(schedule, a, straggler_prob, seed)
+    plan = rfaults.draw_fault_plan(schedule, a, fleet.n_pods, faults)
+    sl = slice(episode_offset, episode_offset + n_eps)
+    rounds0 = int(schedule[:episode_offset].sum())
 
     rates_eps = jnp.asarray(traces[:, :n_eps * cfg.n_steps]).reshape(
         a, n_eps, cfg.n_steps).transpose(1, 0, 2)
-    avail = jnp.asarray(avail)
-    do_fl = jnp.asarray(schedule)
-    ep_idx = jnp.arange(n_eps, dtype=jnp.int32)
+    avail = jnp.asarray(avail[sl])
+    do_fl = jnp.asarray(schedule[sl])
+    ep_idx = jnp.arange(episode_offset, episode_offset + n_eps,
+                        dtype=jnp.int32)
+    crash_eps = jnp.asarray(plan.crash[sl])
+    byz_eps = jnp.asarray(plan.byzantine[sl])
+    part_eps = jnp.asarray(plan.partition[sl])
 
     if mesh is not None:
         fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
@@ -516,7 +719,9 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     try:
         fleet, history = _scan_fn(bool(donate))(
             cfg, fleet, rates_eps, avail, do_fl, ep_idx,
-            jnp.asarray(sid, jnp.int32), learn, backend, transport, stream)
+            jnp.asarray(sid, jnp.int32), crash_eps, byz_eps, part_eps,
+            jnp.asarray(rounds0, jnp.int32), learn, backend, transport,
+            faults, guards, stream)
         history = jax.device_get(history)
     finally:
         if stream:
@@ -531,7 +736,8 @@ def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                 learn: bool = True, federated: bool = True,
                 straggler_prob: float = 0.0, seed: int = 0,
                 env_backend=None, transport: Optional[TransportConfig] = None,
-                metrics_sink=None):
+                metrics_sink=None, faults: Optional[FaultConfig] = None,
+                guards: Optional[GuardConfig] = None):
     """Compatibility entry point — delegates to the scanned driver. Buffer
     donation stays off so callers may keep using the input fleet (forking a
     fleet into warm/cold copies is a common pattern in the benchmarks)."""
@@ -539,4 +745,5 @@ def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                             federated=federated,
                             straggler_prob=straggler_prob, seed=seed,
                             donate=False, env_backend=env_backend,
-                            transport=transport, metrics_sink=metrics_sink)
+                            transport=transport, metrics_sink=metrics_sink,
+                            faults=faults, guards=guards)

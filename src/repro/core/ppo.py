@@ -135,7 +135,20 @@ def agent_update(cfg: FCPOConfig, params, opt, rollout: Rollout, mask: ActionMas
 
     gated = jnp.abs(loss) < cfg.loss_gate
     new_params, new_opt = jax.lax.cond(gated, skip, do_update, None)
-    metrics = dict(metrics, gated=gated.astype(jnp.float32))
+    # Self-healing non-finite guard: a NaN/Inf loss or a blown-up update
+    # (e.g. from a poisoned reward stream) rejects the whole step — previous
+    # params AND optimizer state are kept, so one bad episode cannot wedge
+    # the agent. Branchless (one ``where`` per leaf): bit-transparent on
+    # healthy steps, and a NaN loss gates to False above so the grad branch
+    # still runs — the rejection happens here, after the fact.
+    ok = jnp.isfinite(loss)
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        ok = ok & jnp.all(jnp.isfinite(leaf))
+    keep = lambda new, old: jnp.where(ok, new, old)
+    new_params = jax.tree.map(keep, new_params, params)
+    new_opt = jax.tree.map(keep, new_opt, opt)
+    metrics = dict(metrics, gated=gated.astype(jnp.float32),
+                   update_rejected=(~ok).astype(jnp.float32))
     return new_params, new_opt, metrics
 
 

@@ -214,12 +214,50 @@ def run_leaderboard(cfg: FCPOConfig, fleet: Fleet,
 # ---------------------------------------------------------------------------
 # Envelope deltas + the regression gate
 # ---------------------------------------------------------------------------
+# fields that must agree between a row and its previous measurement for the
+# comparison to mean anything — a changed shape (different agent count,
+# episode budget, replicate count, ...) is an incompatible grid, and gating
+# against it would flag phantom regressions
+COMPAT_KEYS: Tuple[str, ...] = ("agents", "episodes", "eval_intervals",
+                                "replicates", "seed")
+
+
+def sanitize_envelope(prev_envelope, warn=None):
+    """Defensive read of a previous ``BENCH_leaderboard*.json`` envelope.
+
+    Returns the envelope when it is usable (a dict whose ``results`` is a
+    list) and None otherwise — a missing, truncated, or non-envelope file
+    degrades the gate to "no baseline" with a warning instead of crashing
+    CI. ``warn`` is an optional ``print``-like callable."""
+    if prev_envelope is None:
+        return None
+    if (not isinstance(prev_envelope, dict)
+            or not isinstance(prev_envelope.get("results"), list)):
+        if warn is not None:
+            warn("leaderboard: previous envelope is not a results envelope "
+                 "— treating as no baseline")
+        return None
+    return prev_envelope
+
+
+def _compatible(row, prev) -> bool:
+    return all(prev.get(k) == row.get(k) for k in COMPAT_KEYS)
+
+
 def attach_deltas(rows: List[Dict[str, Any]],
-                  prev_envelope: Optional[Dict[str, Any]]) -> List[Dict[str, Any]]:
+                  prev_envelope: Optional[Dict[str, Any]],
+                  warn=None) -> List[Dict[str, Any]]:
     """Fold the previous envelope into ``rows`` (in place): for every cell
     present in both, ``prev_<k>`` and ``delta_<k>`` (new − prev) for each
     ``DELTA_KEYS`` metric. Cells with no previous measurement carry no
-    delta fields — a grown grid is not a regression."""
+    delta fields — a grown grid is not a regression.
+
+    Degrades gracefully: an unusable envelope (``sanitize_envelope``), a
+    cell row measured on an incompatible grid (``COMPAT_KEYS`` mismatch),
+    or a torn/non-numeric previous value each skip the delta (warn via
+    ``warn`` when given) instead of raising — a corrupted baseline must
+    not take the CI gate down with it."""
+    prev_envelope = sanitize_envelope(prev_envelope, warn)
     prev_rows = {r["name"]: r
                  for r in (prev_envelope or {}).get("results", [])
                  if isinstance(r, dict) and "name" in r}
@@ -227,10 +265,24 @@ def attach_deltas(rows: List[Dict[str, Any]],
         prev = prev_rows.get(row["name"])
         if prev is None:
             continue
+        if not _compatible(row, prev):
+            if warn is not None:
+                diffs = [k for k in COMPAT_KEYS
+                         if prev.get(k) != row.get(k)]
+                warn(f"leaderboard: {row['name']} previous row is from an "
+                     f"incompatible grid ({', '.join(diffs)} changed) — "
+                     f"no baseline for this cell")
+            continue
         for k in DELTA_KEYS:
             if k in prev and k in row:
-                row[f"prev_{k}"] = float(prev[k])
-                row[f"delta_{k}"] = float(row[k]) - float(prev[k])
+                try:
+                    pv, nv = float(prev[k]), float(row[k])
+                except (TypeError, ValueError):
+                    continue
+                if not np.isfinite(pv):
+                    continue
+                row[f"prev_{k}"] = pv
+                row[f"delta_{k}"] = nv - pv
     return rows
 
 
@@ -243,16 +295,24 @@ def check_regressions(rows: List[Dict[str, Any]], tol: float = DEFAULT_TOL,
     Tolerance per cell: ``tolerances[cell_name]`` overrides ``tol``; the
     allowed drop is ``tol * max(|prev|, floor)`` with the metric's absolute
     floor from ``GATE_METRICS``, so noisy near-zero cells don't gate on
-    roundoff. Rows without ``prev_*`` fields (first run, new cells) never
-    fail. Call ``attach_deltas`` first."""
+    roundoff. Rows without ``prev_*`` fields (first run, new cells,
+    incompatible or corrupt baselines — see ``attach_deltas``) never fail.
+    Call ``attach_deltas`` first."""
     failures = []
     for row in rows:
+        if not isinstance(row, dict) or "name" not in row:
+            continue
         cell_tol = (tolerances or {}).get(row["name"], tol)
         for metric, floor in GATE_METRICS.items():
             prev_key = f"prev_{metric}"
-            if prev_key not in row:
+            if prev_key not in row or metric not in row:
                 continue
-            prev, new = row[prev_key], float(row[metric])
+            try:
+                prev, new = float(row[prev_key]), float(row[metric])
+            except (TypeError, ValueError):
+                continue
+            if not (np.isfinite(prev) and np.isfinite(new)):
+                continue
             allowed = cell_tol * max(abs(prev), floor)
             if prev - new > allowed:
                 failures.append(

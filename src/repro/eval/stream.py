@@ -117,4 +117,6 @@ def fl_round_summary(records: List[Dict[str, Any]]) -> Optional[Dict[str, float]
         "uplink_s": mean("fl_uplink_s"),
         "missed": mean("fl_missed"),
         "stale_used": mean("fl_stale_used"),
+        "rejected": mean("fl_rejected"),
+        "clipped": mean("fl_clipped"),
     }

@@ -15,7 +15,7 @@ and benchmarked by ``benchmarks/fig_fl_comm.py``.
 from repro.fl.codec import codec_roundtrip, residuals_init  # noqa: F401
 from repro.fl.staleness import (PendingDeltas, merge_contributions,  # noqa: F401
                                 pending_init, stale_weights,
-                                update_pending)
+                                update_pending, validate_pending)
 from repro.fl.transport import (CODECS, DEFAULT_TRANSPORT,  # noqa: F401
                                 FL_METRIC_KEYS, TransportConfig,
                                 agent_payload_bytes, downlink_bytes,

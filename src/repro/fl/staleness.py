@@ -58,6 +58,21 @@ def _bmask(m, leaf):
     return m.reshape(m.shape + (1,) * (leaf.ndim - 1))
 
 
+def validate_pending(pending: PendingDeltas):
+    """Drop parked deltas that fail the finiteness check before anything
+    consumes them (a poisoned upload parked in an earlier round must not
+    resurface into aggregation later). Returns ``(pending, n_dropped)`` —
+    the invalid slots are cleared from ``has`` so they are neither
+    selectable nor consumable and age out of the buffer on the next
+    ``update_pending``. The check is the identity on a healthy buffer."""
+    from repro.resilience.guards import finite_mask
+
+    ok = finite_mask(pending.delta)
+    dropped = pending.has & ~ok
+    return (pending._replace(has=pending.has & ok),
+            jnp.sum(dropped).astype(jnp.float32))
+
+
 def stale_weights(pending: PendingDeltas, decay: float) -> jnp.ndarray:
     """(A,) discount applied to a parked delta when it is consumed."""
     return jnp.asarray(decay, jnp.float32) ** pending.staleness

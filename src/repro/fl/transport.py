@@ -154,7 +154,7 @@ def on_time_mask(uplink_s, deadline_s: float) -> jnp.ndarray:
 # Per-round metrics surfaced into the training history
 # ---------------------------------------------------------------------------
 FL_METRIC_KEYS = ("fl_payload_bytes", "fl_uplink_s", "fl_missed",
-                  "fl_stale_used")
+                  "fl_stale_used", "fl_rejected", "fl_clipped")
 
 
 def fl_zero_metrics() -> Dict[str, jnp.ndarray]:

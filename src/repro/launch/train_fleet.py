@@ -25,6 +25,19 @@ Examples:
 subsystem (``repro.fl``): compressed ``params - base`` deltas with error
 feedback, uplink-time round deadlines (emergent stragglers), and
 staleness-tolerant async rounds — all inside the same single jitted scan.
+
+``--fault-*`` / ``--robust-agg`` configure the chaos layer
+(``repro.resilience``): injected crashes / byzantine deltas / pod
+partitions and the robust-aggregation defenses. ``--ckpt-dir`` +
+``--ckpt-every`` add periodic checkpointing with auto-resume: a killed run
+relaunched with the same command restarts from ``latest_step`` and
+produces the same numbers as an uninterrupted run (straggler draws, fault
+plans, and merge cadence all follow the absolute episode index).
+
+  PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --episodes 100 \
+      --fault-byzantine-frac 0.2 --robust-agg trimmed   # survive poison
+  PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --episodes 100 \
+      --ckpt-dir /tmp/run1 --ckpt-every 10              # kill-safe training
 """
 from __future__ import annotations
 
@@ -32,6 +45,7 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.fcpo import FCPOConfig
@@ -41,7 +55,10 @@ from repro.core.fleet import (fleet_init, train_fleet_reference,
 from repro.eval.stream import MetricsSink
 from repro.fl import CODECS, TransportConfig
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.resilience import BYZANTINE_MODES, FaultConfig, GuardConfig
+from repro.resilience.guards import AGG_METHODS
 from repro.sim import SCENARIOS, SimParams, make_scenario
+from repro.training import checkpoint as ckpt_mod
 
 
 def main(argv=None):
@@ -102,6 +119,72 @@ def main(argv=None):
                          "fl_payload_bytes, miss/stale rates, ...) to this "
                          "JSONL file while training runs; tail it live with "
                          "python -m repro.launch.watch <file> --follow")
+    # --- chaos layer: fault injection (repro.resilience.FaultConfig) ---
+    ap.add_argument("--fault-crash-prob", type=float, default=0.0,
+                    help="per-agent per-episode crash probability: the "
+                         "agent's state freezes (params zeroed), it leaves "
+                         "episodes and Eq. 7 selection for "
+                         "--fault-crash-recovery episodes, then rejoins "
+                         "warm-started from its pod base network. Unlike "
+                         "--straggler-prob (one missed FL round, Bernoulli "
+                         "per round) a crash is a multi-episode outage")
+    ap.add_argument("--fault-crash-recovery", type=int, default=2,
+                    help="episodes a crashed agent stays down")
+    ap.add_argument("--fault-byzantine-frac", type=float, default=0.0,
+                    help="per-agent per-round probability of shipping a "
+                         "corrupted delta (applied post-codec, so it "
+                         "composes with --fl-codec int8/topk)")
+    ap.add_argument("--fault-byzantine-mode", choices=BYZANTINE_MODES,
+                    default="sign_flip",
+                    help="corruption: sign_flip (scaled negation), noise "
+                         "(additive gaussian), nan (poisoned upload)")
+    ap.add_argument("--fault-byzantine-scale", type=float, default=10.0,
+                    help="magnitude of sign_flip/noise corruption")
+    ap.add_argument("--fault-partition-prob", type=float, default=0.0,
+                    help="per-pod probability, at each hierarchical merge, "
+                         "of dropping off the cloud tier for "
+                         "--fault-partition-merges merge events")
+    ap.add_argument("--fault-partition-merges", type=int, default=1,
+                    help="merge events a partitioned pod skips")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault plan (independent of --seed so "
+                         "the same workload can be replayed under different "
+                         "fault draws)")
+    # --- chaos layer: defenses (repro.resilience.GuardConfig) ---
+    ap.add_argument("--robust-agg", choices=AGG_METHODS, default="mean",
+                    help="Algorithm 1 statistic: mean is the paper's "
+                         "aggregation (bit-identical legacy path); trimmed/"
+                         "median are coordinate-wise robust variants that "
+                         "bound byzantine influence. Composes with "
+                         "--straggler-prob and --fl-deadline-s: the robust "
+                         "statistic runs over whatever clients survived "
+                         "availability + deadline selection")
+    ap.add_argument("--trim-frac", type=float, default=0.2,
+                    help="per-side trim fraction of the trimmed-mean "
+                         "aggregator (in [0, 0.5))")
+    ap.add_argument("--clip-factor", type=float, default=0.0,
+                    help="clip each client delta leaf to this multiple of "
+                         "the selected-client median leaf norm; 0 disables")
+    ap.add_argument("--no-reject-nonfinite", action="store_true",
+                    help="disable the NaN/Inf contribution rejection "
+                         "(on by default; only useful for demonstrating "
+                         "what poison does to an unguarded fleet)")
+    # --- periodic checkpoint + auto-resume ---
+    ap.add_argument("--ckpt-dir", type=str, default=None,
+                    help="checkpoint directory (training.checkpoint "
+                         "layout). If it already holds checkpoints, the run "
+                         "AUTO-RESUMES from latest_step and reproduces the "
+                         "uninterrupted run's numbers exactly")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save a checkpoint every N episodes (requires "
+                         "--ckpt-dir; 0 saves only at the end of the run)")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="prune all but the newest N checkpoints after "
+                         "every save")
+    ap.add_argument("--stop-after", type=int, default=0,
+                    help="exit after this many episodes of THIS invocation "
+                         "(kill-and-resume drills; requires --ckpt-dir). "
+                         "0 disables")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.episodes < 1:
@@ -127,9 +210,31 @@ def main(argv=None):
     if args.fl_topk_frac != 0.05 and args.fl_codec != "topk":
         ap.error("--fl-topk-frac only affects the topk codec; add "
                  "--fl-codec topk")
+    if args.ckpt_every and not args.ckpt_dir:
+        ap.error("--ckpt-every needs --ckpt-dir")
+    if args.stop_after and not args.ckpt_dir:
+        ap.error("--stop-after simulates a kill mid-run and only makes "
+                 "sense with --ckpt-dir (nothing would survive otherwise)")
+    if args.ckpt_dir and args.driver == "reference":
+        ap.error("--ckpt-dir periodic checkpointing drives the scan "
+                 "driver; drop --driver reference")
+    if args.ckpt_every < 0 or args.stop_after < 0 or args.keep_last < 1:
+        ap.error("--ckpt-every/--stop-after must be >= 0, --keep-last >= 1")
 
     cfg = FCPOConfig() if args.fl_every is None else \
         FCPOConfig(fl_every=args.fl_every)
+    faults = FaultConfig(
+        crash_prob=args.fault_crash_prob,
+        crash_recovery=args.fault_crash_recovery,
+        byzantine_frac=args.fault_byzantine_frac,
+        byzantine_mode=args.fault_byzantine_mode,
+        byzantine_scale=args.fault_byzantine_scale,
+        partition_prob=args.fault_partition_prob,
+        partition_merges=args.fault_partition_merges,
+        seed=args.fault_seed)
+    guards = GuardConfig(agg=args.robust_agg, trim_frac=args.trim_frac,
+                         clip_factor=args.clip_factor,
+                         reject_nonfinite=not args.no_reject_nonfinite)
     transport = TransportConfig(codec=args.fl_codec,
                                 topk_frac=args.fl_topk_frac,
                                 deadline_s=args.fl_deadline_s,
@@ -157,17 +262,59 @@ def main(argv=None):
 
     kw = dict(learn=not args.no_learn, federated=not args.no_federated,
               straggler_prob=args.straggler_prob, seed=args.seed,
-              env_backend=backend, transport=transport)
+              env_backend=backend, transport=transport,
+              faults=faults if faults.active else None, guards=guards)
     sink = None
     if args.metrics_out:
         sink = MetricsSink(args.metrics_out, meta=dict(
             agents=args.agents, pods=args.pods, episodes=args.episodes,
             driver=args.driver, env_backend=backend.name,
-            scenario=args.scenario, fl_codec=args.fl_codec, seed=args.seed))
+            scenario=args.scenario, fl_codec=args.fl_codec,
+            robust_agg=args.robust_agg, seed=args.seed))
         kw["metrics_sink"] = sink
     t0 = time.time()
     try:
-        if args.driver == "scan":
+        if args.ckpt_dir:
+            # Periodic checkpointing + auto-resume. The full traces cover
+            # [0, episodes); each chunk replays its slice with the absolute
+            # episode_offset so straggler draws, fault plans, and merge
+            # cadence match the uninterrupted run exactly.
+            start = ckpt_mod.latest_step(args.ckpt_dir) or 0
+            if start >= args.episodes:
+                print(f"checkpoint step {start} >= --episodes "
+                      f"{args.episodes}: run already complete, nothing to do")
+                return fleet, {}
+            if start > 0:
+                fleet, _ = ckpt_mod.restore(args.ckpt_dir, start, fleet)
+                print(f"auto-resume: restored episode {start} from "
+                      f"{args.ckpt_dir}")
+            chunk = args.ckpt_every or (args.episodes - start)
+            hists, e, done_here = [], start, 0
+            while e < args.episodes:
+                n = min(chunk, args.episodes - e)
+                if args.stop_after:
+                    n = min(n, args.stop_after - done_here)
+                tr = traces[:, e * cfg.n_steps:(e + n) * cfg.n_steps]
+                fleet, h = train_fleet_scan(cfg, fleet, tr, mesh=mesh,
+                                            episode_offset=e,
+                                            total_episodes=args.episodes,
+                                            **kw)
+                hists.append(h)
+                e += n
+                done_here += n
+                ckpt_mod.save(args.ckpt_dir, e, fleet, extra=dict(
+                    episodes=args.episodes, agents=args.agents,
+                    pods=args.pods, seed=args.seed,
+                    scenario=args.scenario))
+                ckpt_mod.keep_last(args.ckpt_dir, args.keep_last)
+                if args.stop_after and done_here >= args.stop_after:
+                    print(f"--stop-after {args.stop_after}: stopping at "
+                          f"episode {e}/{args.episodes} (rerun the same "
+                          f"command to resume)")
+                    break
+            hist = {k: np.concatenate([np.asarray(h[k]) for h in hists])
+                    for k in hists[0]}
+        elif args.driver == "scan":
             fleet, hist = train_fleet_scan(cfg, fleet, traces, mesh=mesh,
                                            **kw)
         else:
@@ -177,8 +324,9 @@ def main(argv=None):
             sink.close()
     wall = time.time() - t0
 
-    k = max(args.episodes // 10, 1)
-    print(f"\nwall {wall:.2f}s  ({wall / args.episodes * 1e3:.1f} ms/episode "
+    n_run = len(np.asarray(hist["reward"]))
+    k = max(n_run // 10, 1)
+    print(f"\nwall {wall:.2f}s  ({wall / n_run * 1e3:.1f} ms/episode "
           f"incl. compile)")
     print(f"{'':24s}{'first ' + str(k) + ' eps':>16s}{'last ' + str(k) + ' eps':>16s}")
     for key, scale, unit in (("reward", 1, ""), ("throughput", 1, "/s"),
@@ -195,7 +343,18 @@ def main(argv=None):
               f"{hist['fl_payload_bytes'][fl_eps].mean() / 1024:.1f} KB/round, "
               f"uplink {hist['fl_uplink_s'][fl_eps].mean() * 1e3:.1f} ms, "
               f"missed {hist['fl_missed'][fl_eps].mean():.2f}/round, "
-              f"stale joins {hist['fl_stale_used'][fl_eps].mean():.2f}/round")
+              f"stale joins {hist['fl_stale_used'][fl_eps].mean():.2f}/round, "
+              f"rejected {np.asarray(hist.get('fl_rejected', 0.0)).sum():.0f}, "
+              f"clipped {np.asarray(hist.get('fl_clipped', 0.0)).sum():.0f}")
+    if faults.active:
+        print(f"\nchaos: crash_prob={faults.crash_prob}, "
+              f"byzantine={faults.byzantine_frac} "
+              f"({faults.byzantine_mode} x{faults.byzantine_scale}), "
+              f"partition={faults.partition_prob}; defenses: "
+              f"agg={guards.agg}, clip={guards.clip_factor}, "
+              f"reject_nonfinite={guards.reject_nonfinite}; "
+              f"update_rejected "
+              f"{np.asarray(hist.get('update_rejected', 0.0)).sum():.0f}")
     return fleet, hist
 
 

@@ -49,7 +49,9 @@ def render(path: str, tail_k: int, metrics=WATCH_METRICS) -> str:
                      f"{fl['payload_bytes'] / 1024:.1f} KB/round, "
                      f"uplink {fl['uplink_s'] * 1e3:.1f} ms, "
                      f"missed {fl['missed']:.2f}/round, "
-                     f"stale joins {fl['stale_used']:.2f}/round")
+                     f"stale joins {fl['stale_used']:.2f}/round, "
+                     f"rejected {fl.get('rejected', 0.0):.2f}/round, "
+                     f"clipped {fl.get('clipped', 0.0):.2f}/round")
     return "\n".join(lines)
 
 

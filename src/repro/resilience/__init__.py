@@ -1,0 +1,21 @@
+"""Chaos layer: deterministic fault injection + self-healing defenses.
+
+``faults`` describes what goes wrong (crashes, byzantine deltas, pod
+partitions) as a jit-static ``FaultConfig`` plus host-side pre-drawn fault
+plans consumed as scan xs — the injected-fault cadence stays ONE jitted
+scan. ``guards`` describes the defenses (robust aggregation, delta
+clipping, non-finite rejection) as a jit-static ``GuardConfig``. The
+default ``GuardConfig()`` with no faults compiles to the exact pre-chaos
+program, bit-for-bit.
+"""
+from repro.resilience.faults import (BYZANTINE_MODES, NO_FAULTS, FaultConfig,
+                                     FaultPlan, apply_crashes, corrupt_deltas,
+                                     draw_fault_plan, freeze_astate)
+from repro.resilience.guards import (DEFAULT_GUARDS, GuardConfig, clip_deltas,
+                                     finite_mask)
+
+__all__ = [
+    "FaultConfig", "FaultPlan", "NO_FAULTS", "BYZANTINE_MODES",
+    "draw_fault_plan", "apply_crashes", "corrupt_deltas", "freeze_astate",
+    "GuardConfig", "DEFAULT_GUARDS", "finite_mask", "clip_deltas",
+]

@@ -1,0 +1,209 @@
+"""Deterministic fault injection for the fleet drivers.
+
+Three fault families, matching what real edge fleets (EdgeVision-style
+distributed deployments) actually suffer:
+
+* **Agent crashes** — an agent goes down for ``crash_recovery`` episodes:
+  its entire ``AgentState`` is frozen (params zeroed or stale at crash
+  time), it leaves episode training and Eq. 7 selection, and on expiry it
+  rejoins via the paper's step-① warm start: params <- its pod's base
+  network, optimizer state zeroed.
+* **Byzantine clients** — a selected client's *decoded* delta is corrupted
+  post-codec (sign-flip, scaled noise, or NaN-poison), i.e. in transit on
+  the server side of the wire, so the injection composes with every codec
+  (float32/int8/topk) and with error feedback exactly as a real corrupted
+  upload would.
+* **Pod partitions** — a partitioned pod skips the hierarchical cross-pod
+  merge for ``partition_merges`` merge events (its base network drifts
+  alone), then rejoins the cloud tier.
+
+Determinism: ``draw_fault_plan`` pre-draws every fault bit on the host from
+one seeded numpy generator, in a fixed episode order shared by the scanned
+and reference drivers — the plan arrays are consumed as scan xs, so an
+injected-fault run is still ONE jitted scan with zero per-round host work,
+and ``train_fleet_scan == train_fleet_reference`` holds under faults.
+Byzantine noise is drawn *inside* jit from a key folded with the absolute
+episode index, so it too is identical across drivers and across resumed
+chunks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BYZANTINE_MODES = ("sign_flip", "noise", "nan")
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Jit-static fault model. All probabilities are per-draw Bernoulli
+    rates; ``seed`` drives both the host-side plan and the in-jit noise.
+
+    crash_prob: per-agent per-episode crash probability. A crashed agent is
+    frozen for ``crash_recovery`` episodes (params zeroed when
+    ``crash_zero_params``, else stale) and rejoins warm-started from its
+    pod's base network. byzantine_frac: per-agent per-round probability of
+    shipping a corrupted delta (``byzantine_mode`` selects the corruption,
+    scaled by ``byzantine_scale``). partition_prob: per-pod probability *at
+    each hierarchical merge* of dropping off the cloud tier for
+    ``partition_merges`` merges."""
+    crash_prob: float = 0.0
+    crash_recovery: int = 2
+    crash_zero_params: bool = True
+    byzantine_frac: float = 0.0
+    byzantine_mode: str = "sign_flip"
+    byzantine_scale: float = 10.0
+    partition_prob: float = 0.0
+    partition_merges: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.byzantine_mode not in BYZANTINE_MODES:
+            raise ValueError(f"unknown byzantine_mode "
+                             f"{self.byzantine_mode!r}; expected one of "
+                             f"{BYZANTINE_MODES}")
+        for name in ("crash_prob", "byzantine_frac", "partition_prob"):
+            v = getattr(self, name)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.crash_recovery < 1:
+            raise ValueError("crash_recovery must be >= 1")
+        if self.partition_merges < 1:
+            raise ValueError("partition_merges must be >= 1")
+
+    @property
+    def crash_active(self) -> bool:
+        return self.crash_prob > 0.0
+
+    @property
+    def byzantine_active(self) -> bool:
+        return self.byzantine_frac > 0.0
+
+    @property
+    def partition_active(self) -> bool:
+        return self.partition_prob > 0.0
+
+    @property
+    def active(self) -> bool:
+        return (self.crash_active or self.byzantine_active
+                or self.partition_active)
+
+
+NO_FAULTS = FaultConfig()
+
+
+class FaultPlan(NamedTuple):
+    """Host-side pre-drawn fault bits, one row per episode (scan xs)."""
+    crash: np.ndarray      # (n_eps, A) bool — crash fires after episode e
+    byzantine: np.ndarray  # (n_eps, A) bool — corrupt upload in round e
+    partition: np.ndarray  # (n_eps, P) bool — pod drops at a merge in ep e
+
+
+def draw_fault_plan(schedule, n_agents: int, n_pods: int,
+                    faults: Optional[FaultConfig]) -> FaultPlan:
+    """Pre-draw the whole run's fault bits from ``faults.seed``.
+
+    Draw order is fixed — per episode: crash bits (every episode when
+    crashes are active), then byzantine and partition bits (FL episodes
+    only) — so a plan drawn over ``total_episodes`` and sliced at an
+    ``episode_offset`` is identical to the uninterrupted run's plan
+    (checkpoint resume keeps the same faults)."""
+    n = len(schedule)
+    crash = np.zeros((n, n_agents), bool)
+    byz = np.zeros((n, n_agents), bool)
+    part = np.zeros((n, n_pods), bool)
+    if faults is not None and faults.active:
+        rng = np.random.default_rng(faults.seed)
+        for e in range(n):
+            if faults.crash_active:
+                crash[e] = rng.random(n_agents) < faults.crash_prob
+            if schedule[e]:
+                if faults.byzantine_active:
+                    byz[e] = rng.random(n_agents) < faults.byzantine_frac
+                if faults.partition_active:
+                    part[e] = rng.random(n_pods) < faults.partition_prob
+    return FaultPlan(crash, byz, part)
+
+
+def _bmask(m, leaf):
+    return m.reshape(m.shape + (1,) * (leaf.ndim - 1))
+
+
+def freeze_astate(down, old_astate, new_astate):
+    """Carry a down agent's entire AgentState unchanged (SPMD-friendly: the
+    dead agent's episode/round still computes, its results are discarded
+    here with one ``where`` per leaf)."""
+    return jax.tree.map(
+        lambda o, n: jnp.where(_bmask(down, n), o, n), old_astate, new_astate)
+
+
+def apply_crashes(faults: FaultConfig, prev_astate, fleet, crash_now):
+    """Advance the crash state machine past one episode.
+
+    Called after ``fleet_episode`` ran for every agent:
+      1. agents already down (timer > 0 at episode entry) have their whole
+         ``AgentState`` restored to the pre-episode value — they did not run;
+      2. timers age; an agent whose window just expired rejoins via the
+         paper's step-① warm start (params <- pod base network, optimizer
+         zeroed, buffer/env kept);
+      3. fresh ``crash_now`` draws take the agent down starting now: timer
+         set to ``crash_recovery``; params+opt zeroed when
+         ``crash_zero_params`` (a wiped device), else left stale.
+
+    Returns ``(fleet, ran, down)`` — ``ran`` marks agents whose episode
+    counted toward metrics, ``down`` marks agents that must sit out the FL
+    round that may follow this episode."""
+    timer = fleet.crash_timer
+    was_down = timer > 0
+    astate = freeze_astate(was_down, prev_astate, fleet.astate)
+
+    timer = jnp.maximum(timer - 1, 0)
+    rejoin = was_down & (timer == 0)
+    base_g = jax.tree.map(lambda b: b[fleet.pod_ids], fleet.base_params)
+    params = jax.tree.map(
+        lambda p, b: jnp.where(_bmask(rejoin, p), b, p), astate.params, base_g)
+    opt = jax.tree.map(
+        lambda o: jnp.where(_bmask(rejoin, o), jnp.zeros_like(o), o),
+        astate.opt)
+
+    new_crash = crash_now & (timer == 0)
+    if faults.crash_zero_params:
+        params = jax.tree.map(
+            lambda p: jnp.where(_bmask(new_crash, p), jnp.zeros_like(p), p),
+            params)
+        opt = jax.tree.map(
+            lambda o: jnp.where(_bmask(new_crash, o), jnp.zeros_like(o), o),
+            opt)
+    timer = jnp.where(new_crash, faults.crash_recovery, timer)
+
+    fleet = fleet._replace(astate=astate._replace(params=params, opt=opt),
+                           crash_timer=timer)
+    return fleet, ~was_down, timer > 0
+
+
+def corrupt_deltas(faults: FaultConfig, decoded, byzantine, key):
+    """Corrupt the post-codec decoded deltas of the agents in ``byzantine``
+    (server-side of the wire — composes with any codec and with error
+    feedback exactly like a real corrupted upload). ``key`` feeds the
+    ``noise`` mode; fold it with the absolute episode index so scanned,
+    reference, and resumed runs corrupt identically."""
+    mode = faults.byzantine_mode
+    leaves, treedef = jax.tree_util.tree_flatten(decoded)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, d):
+        if mode == "sign_flip":
+            bad = -faults.byzantine_scale * d
+        elif mode == "noise":
+            bad = d + faults.byzantine_scale * jax.random.normal(
+                k, d.shape, d.dtype)
+        else:  # nan — a poisoned upload
+            bad = jnp.full_like(d, jnp.nan)
+        return jnp.where(_bmask(byzantine, d), bad, d)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(k, d) for k, d in zip(keys, leaves)])

@@ -1,0 +1,90 @@
+"""Self-healing defenses for Algorithm 1 and the PPO update.
+
+``GuardConfig`` is a frozen (hashable) dataclass threaded through
+``fl_round`` / the fleet drivers as a jit-static argument:
+
+* ``agg`` — the Algorithm 1 aggregation statistic: ``"mean"`` is the
+  paper's masked segment-mean (the exact pre-chaos code path, bit-for-bit);
+  ``"trimmed"`` / ``"median"`` are coordinate-wise robust variants computed
+  over {selected clients} ∪ {base network} that bound the influence of any
+  f byzantine clients (f ≤ trim budget) to the honest coordinate range.
+* ``clip_factor`` — per-leaf L2 norm clip of client deltas against
+  ``clip_factor ×`` the selected-client median leaf norm (0 disables;
+  a scaled-up byzantine delta is shrunk back to honest magnitude).
+* ``reject_nonfinite`` — drop contributions (fresh or staleness-parked)
+  containing NaN/Inf from the aggregation mask before they touch any pod
+  member. On by default: the check is the identity on healthy rounds, so
+  the default config stays bit-identical seed-for-seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+AGG_METHODS = ("mean", "trimmed", "median")
+
+
+@dataclass(frozen=True)
+class GuardConfig:
+    agg: str = "mean"
+    trim_frac: float = 0.2
+    clip_factor: float = 0.0
+    reject_nonfinite: bool = True
+
+    def __post_init__(self):
+        if self.agg not in AGG_METHODS:
+            raise ValueError(f"unknown agg {self.agg!r}; expected one of "
+                             f"{AGG_METHODS}")
+        if not (0.0 <= self.trim_frac < 0.5):
+            raise ValueError("trim_frac must be in [0, 0.5)")
+        if self.clip_factor < 0.0:
+            raise ValueError("clip_factor must be >= 0")
+
+
+DEFAULT_GUARDS = GuardConfig()
+
+
+def finite_mask(tree) -> jnp.ndarray:
+    """(A,) bool — True where every leaf of agent i is entirely finite."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    ok = jnp.ones((jnp.shape(leaves[0])[0],), bool)
+    for leaf in leaves:
+        flat = leaf.reshape(leaf.shape[0], -1)
+        ok = ok & jnp.all(jnp.isfinite(flat), axis=1)
+    return ok
+
+
+def _masked_median_1d(x, mask):
+    """Median of ``x[mask]`` (scalar); +inf when the mask is empty."""
+    n = jnp.sum(mask)
+    srt = jnp.sort(jnp.where(mask, x, jnp.inf))
+    lo = srt[jnp.maximum((n - 1) // 2, 0)]
+    hi = srt[jnp.maximum(n // 2, 0)]
+    return 0.5 * (lo + hi)
+
+
+def clip_deltas(contrib, sel, clip_factor: float):
+    """Per-leaf L2 norm clip against ``clip_factor ×`` the selected-client
+    median norm of that leaf. Returns ``(clipped_tree, n_clipped)`` where
+    ``n_clipped`` counts agents with at least one clipped leaf. Unselected
+    agents are never scaled (their entries are ignored downstream)."""
+    a = jnp.shape(sel)[0]
+    any_clip = jnp.zeros((a,), bool)
+
+    def one(d, any_c):
+        flat = d.reshape(d.shape[0], -1)
+        nrm = jnp.sqrt(jnp.sum(flat * flat, axis=1))
+        lim = clip_factor * _masked_median_1d(nrm, sel)
+        hit = sel & (nrm > lim)
+        scale = jnp.where(hit, lim / jnp.maximum(nrm, 1e-12), 1.0)
+        return d * scale.reshape((-1,) + (1,) * (d.ndim - 1)), any_c | hit
+
+    leaves, treedef = jax.tree_util.tree_flatten(contrib)
+    out = []
+    for leaf in leaves:
+        clipped, any_clip = one(leaf, any_clip)
+        out.append(clipped)
+    n_clipped = jnp.sum(any_clip).astype(jnp.float32)
+    return jax.tree_util.tree_unflatten(treedef, out), n_clipped

@@ -49,23 +49,94 @@ def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None
     return arrays_path
 
 
+def _complete_steps(ckpt_dir: str):
+    """Step numbers of every *complete* checkpoint: a parseable manifest
+    whose ``.npz`` arrays file exists, is non-empty, and starts with a zip
+    header. Half-deleted or torn checkpoint dirs (a crash mid-prune, a
+    full disk) simply don't list."""
+    steps = []
+    for f in os.listdir(ckpt_dir):
+        if not (f.startswith("step_") and f.endswith(".json")):
+            continue
+        try:
+            step = int(f[len("step_"):-len(".json")])
+        except ValueError:
+            continue
+        try:
+            with open(os.path.join(ckpt_dir, f)) as fh:
+                manifest = json.load(fh)
+            arrays = os.path.join(ckpt_dir, manifest["arrays"])
+            with open(arrays, "rb") as fh:
+                magic = fh.read(4)
+        except (OSError, json.JSONDecodeError, KeyError, TypeError):
+            continue
+        if magic != b"PK\x03\x04":  # npz is a zip; torn writes fail here
+            continue
+        steps.append(step)
+    return sorted(steps)
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest complete checkpoint step, or None. Manifests whose arrays
+    file is missing or unreadable are skipped, so auto-resume after a crash
+    lands on the newest checkpoint that can actually be restored."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(f[len("step_"):-len(".json")])
-             for f in os.listdir(ckpt_dir)
-             if f.startswith("step_") and f.endswith(".json")]
-    return max(steps) if steps else None
+    steps = _complete_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def keep_last(ckpt_dir: str, n: int) -> int:
+    """Prune all but the newest ``n`` complete checkpoints (manifest +
+    arrays). Long chaos runs checkpoint frequently; this bounds the disk
+    footprint. Returns the number of checkpoints removed."""
+    if n < 1:
+        raise ValueError(f"keep_last needs n >= 1, got {n}")
+    if not os.path.isdir(ckpt_dir):
+        return 0
+    doomed = _complete_steps(ckpt_dir)[:-n]
+    for step in doomed:
+        for suffix in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(ckpt_dir, f"step_{step:08d}{suffix}"))
+            except FileNotFoundError:
+                pass
+    return len(doomed)
 
 
 def restore(ckpt_dir: str, step: int, like, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). If ``shardings`` (a matching pytree of NamedSharding)
     is given, arrays are placed sharded — onto the *current* mesh, which may
-    differ from the mesh at save time (elastic restore)."""
-    with open(os.path.join(ckpt_dir, f"step_{step:08d}.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(ckpt_dir, manifest["arrays"]))
+    differ from the mesh at save time (elastic restore).
+
+    Corrupt checkpoints raise a ``ValueError`` naming the offending file
+    (instead of a raw ``zipfile``/``np.load`` exception from deep inside
+    numpy); a missing manifest raises ``FileNotFoundError``."""
+    mpath = os.path.join(ckpt_dir, f"step_{step:08d}.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise FileNotFoundError(
+            f"no checkpoint manifest at {mpath} — wrong step or dir? "
+            f"(latest complete step: {latest_step(ckpt_dir)})")
+    except json.JSONDecodeError as e:
+        raise ValueError(f"corrupt checkpoint manifest {mpath}: {e}")
+    if not isinstance(manifest, dict) or "arrays" not in manifest:
+        raise ValueError(f"corrupt checkpoint manifest {mpath}: missing "
+                         f"'arrays' entry")
+    apath = os.path.join(ckpt_dir, manifest["arrays"])
+    try:
+        data = np.load(apath)
+        data.keys()  # force the zip directory read so corruption fails HERE
+    except FileNotFoundError:
+        raise ValueError(
+            f"checkpoint arrays file {apath} is missing (named by manifest "
+            f"{mpath}; the dir is half-deleted) — restore an older step or "
+            f"re-save")
+    except Exception as e:  # zipfile.BadZipFile, OSError, pickle errors, ...
+        raise ValueError(f"corrupt checkpoint arrays file {apath}: {e}")
 
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     keys = []

@@ -99,7 +99,18 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig = AdamWConfig(),
             extras = {"ce": loss, "moe_aux": jnp.zeros((), jnp.float32)}
 
         new_params, new_opt, om = adamw_update(opt_cfg, params, grads, state["opt"])
-        metrics = {"loss": loss, **extras, **om}
+        # Self-healing: a non-finite loss or a NaN/Inf anywhere in the updated
+        # params rejects the whole step — params AND opt state keep their old
+        # values (branchless, so the jitted graph is unchanged) and the
+        # rejection is counted instead of poisoning every later step.
+        ok = jnp.isfinite(loss)
+        for leaf in jax.tree_util.tree_leaves(new_params):
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(leaf)))
+        keep = lambda new, old: jnp.where(ok, new, old)
+        new_params = jax.tree.map(keep, new_params, params)
+        new_opt = jax.tree.map(keep, new_opt, state["opt"])
+        metrics = {"loss": loss, **extras, **om,
+                   "update_rejected": (~ok).astype(jnp.float32)}
         return {"params": new_params, "opt": new_opt}, metrics
 
     return train_step

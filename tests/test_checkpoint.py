@@ -84,3 +84,74 @@ class TestFleetCheckpoint:
                                            np.asarray(x).dtype), wrong)
         with pytest.raises(ValueError, match="shape mismatch"):
             ckpt.restore(str(tmp_path), 1, like)
+
+
+class TestHardening:
+    """Torn writes, half-deleted dirs, and corrupt files must degrade to
+    clear errors (restore) or silent skips (latest_step/keep_last) — a
+    crashed run's leftovers can't wedge auto-resume."""
+
+    def _save_steps(self, tmp_path, steps):
+        fleet = fleet_init(CFG, 2, KEY)
+        for s in steps:
+            ckpt.save(str(tmp_path), s, fleet)
+        return fleet
+
+    def test_latest_step_skips_broken_npz(self, tmp_path):
+        self._save_steps(tmp_path, [1, 2])
+        (tmp_path / "step_00000002.npz").write_bytes(b"torn write!")
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+    def test_latest_step_skips_manifest_without_arrays(self, tmp_path):
+        self._save_steps(tmp_path, [1, 2])
+        (tmp_path / "step_00000002.npz").unlink()  # half-deleted
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+    def test_latest_step_skips_garbage_manifest(self, tmp_path):
+        self._save_steps(tmp_path, [1])
+        (tmp_path / "step_00000009.json").write_text("{not json")
+        (tmp_path / "step_woops.json").write_text("{}")
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+    def test_keep_last_prunes_oldest_complete(self, tmp_path):
+        self._save_steps(tmp_path, [1, 2, 3, 4, 5])
+        assert ckpt.keep_last(str(tmp_path), 3) == 2
+        assert ckpt.latest_step(str(tmp_path)) == 5
+        assert not (tmp_path / "step_00000001.npz").exists()
+        assert not (tmp_path / "step_00000002.json").exists()
+        assert (tmp_path / "step_00000003.npz").exists()
+        assert ckpt.keep_last(str(tmp_path), 3) == 0  # idempotent
+        with pytest.raises(ValueError, match=">= 1"):
+            ckpt.keep_last(str(tmp_path), 0)
+        assert ckpt.keep_last(str(tmp_path / "nope"), 2) == 0
+
+    def _like(self, fleet):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(np.shape(x),
+                                           np.asarray(x).dtype), fleet)
+
+    def test_restore_missing_manifest_names_latest(self, tmp_path):
+        fleet = self._save_steps(tmp_path, [3])
+        with pytest.raises(FileNotFoundError, match="latest complete step: 3"):
+            ckpt.restore(str(tmp_path), 7, self._like(fleet))
+
+    def test_restore_corrupt_manifest_raises_value_error(self, tmp_path):
+        fleet = self._save_steps(tmp_path, [1])
+        (tmp_path / "step_00000001.json").write_text("{torn")
+        with pytest.raises(ValueError, match="corrupt checkpoint manifest"):
+            ckpt.restore(str(tmp_path), 1, self._like(fleet))
+        (tmp_path / "step_00000001.json").write_text('{"step": 1}')
+        with pytest.raises(ValueError, match="missing 'arrays'"):
+            ckpt.restore(str(tmp_path), 1, self._like(fleet))
+
+    def test_restore_corrupt_arrays_names_file(self, tmp_path):
+        fleet = self._save_steps(tmp_path, [1])
+        (tmp_path / "step_00000001.npz").write_bytes(b"PK\x03\x04 nope")
+        with pytest.raises(ValueError, match="corrupt checkpoint arrays"):
+            ckpt.restore(str(tmp_path), 1, self._like(fleet))
+
+    def test_restore_missing_arrays_file_raises(self, tmp_path):
+        fleet = self._save_steps(tmp_path, [1])
+        (tmp_path / "step_00000001.npz").unlink()
+        with pytest.raises(ValueError, match="missing"):
+            ckpt.restore(str(tmp_path), 1, self._like(fleet))

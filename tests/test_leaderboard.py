@@ -255,6 +255,73 @@ class TestStreamingMetrics:
         assert "episodes recorded: 3" in text and "FL:" not in text
 
 
+class TestGracefulDegradation:
+    """A corrupt/truncated/incompatible previous envelope degrades to
+    "no baseline" with a warning — it must never take the gate down."""
+
+    def _rows(self):
+        return [{"name": "leaderboard_steady_fluid_int8", "agents": 4,
+                 "episodes": 6, "eval_intervals": 30, "replicates": 3,
+                 "seed": 0, "reward_mean": 0.5, "eval_eff_mean": 40.0}]
+
+    def test_sanitize_rejects_non_envelopes(self):
+        from repro.eval.leaderboard import sanitize_envelope
+        warns = []
+        assert sanitize_envelope(None) is None
+        for bad in ([1, 2, 3], "truncated", {"no_results": 1},
+                    {"results": "not-a-list"}):
+            assert sanitize_envelope(bad, warn=warns.append) is None
+        assert len(warns) == 4
+        good = {"results": []}
+        assert sanitize_envelope(good) is good
+
+    def test_attach_deltas_survives_garbage_envelope(self):
+        rows = self._rows()
+        attach_deltas(rows, {"results": [None, 17, "x", {"noname": 1}]})
+        assert not any(k.startswith(("prev_", "delta_")) for k in rows[0])
+        assert check_regressions(rows) == []
+
+    def test_incompatible_grid_skips_cell_with_warning(self):
+        rows = self._rows()
+        prev_row = dict(rows[0], agents=8, eval_eff_mean=400.0)
+        warns = []
+        attach_deltas(rows, {"results": [prev_row]}, warn=warns.append)
+        assert "prev_eval_eff_mean" not in rows[0]
+        assert len(warns) == 1 and "agents" in warns[0]
+        assert check_regressions(rows) == []
+
+    def test_non_numeric_and_non_finite_prev_values_skip_metric(self):
+        rows = self._rows()
+        prev_row = dict(rows[0])
+        prev_row["reward_mean"] = "NaN-ish garbage"
+        prev_row["eval_eff_mean"] = float("nan")
+        attach_deltas(rows, {"results": [prev_row]})
+        assert "prev_reward_mean" not in rows[0]
+        assert "prev_eval_eff_mean" not in rows[0]
+        assert check_regressions(rows) == []
+
+    def test_check_regressions_skips_malformed_rows(self):
+        rows = [None, "x", {"reward_mean": 1.0},
+                {"name": "c", "reward_mean": 0.1, "eval_eff_mean": 1.0,
+                 "prev_reward_mean": "garbage",
+                 "prev_eval_eff_mean": float("inf")}]
+        assert check_regressions(rows) == []
+
+    def test_cli_survives_corrupt_previous_envelope(self, tmp_path):
+        """End-to-end: a truncated BENCH json on disk -> warning + no
+        baseline, exit 0."""
+        out = tmp_path / "BENCH_leaderboard_smoke.json"
+        out.write_text('{"results": [{"name": "lead')  # torn write
+        rc = lb_cli.main(["--smoke", "--gate", "--scenarios", "steady",
+                          "--backends", "fluid", "--codecs", "float32",
+                          "--agents", "2", "--episodes", "2",
+                          "--eval-intervals", "8", "--replicates", "1",
+                          "--out-dir", str(tmp_path)])
+        assert rc == 0
+        # and the fresh envelope it wrote IS parseable
+        assert json.load(open(out))["results"]
+
+
 @pytest.mark.slow
 class TestFullGrid:
     """Full 9 x 2 x 3 grid (RUN_SLOW=1): every cell evaluates and the

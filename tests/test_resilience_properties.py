@@ -1,0 +1,32 @@
+"""Hypothesis property tests for the robust aggregation statistics
+(skipped, like test_properties.py, when hypothesis is not installed —
+tests/test_resilience.py carries a deterministic slice of the same
+invariant)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_resilience import _robust_within_honest_range  # noqa: E402
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def honest_and_byzantine(draw):
+    honest = draw(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                           min_size=2, max_size=6))
+    f = draw(st.integers(0, len(honest) - 1))
+    byz = [draw(st.sampled_from([-1e9, -1e6, 1e6, 1e9])) for _ in range(f)]
+    return honest, byz
+
+
+@settings(**SETTINGS)
+@given(honest_and_byzantine())
+def test_trimmed_and_median_within_honest_range(hb):
+    """Coordinate-wise robustness: byzantine values (any magnitude, any
+    sign) cannot drag the trimmed mean or median outside the honest
+    values' [min, max] as long as the trim budget covers them."""
+    honest, byz = hb
+    _robust_within_honest_range([float(np.float32(h)) for h in honest], byz)
