@@ -64,6 +64,7 @@ def save_bench(name: str, results: List[Dict], extra: Optional[Dict] = None,
         "git_sha": git_sha(),
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
         "platform": platform.platform(),
         "timestamp": time.time(),
         "results": results,

@@ -21,6 +21,7 @@ driver.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from functools import partial
 from typing import Any, Dict, NamedTuple, Optional
 
@@ -43,6 +44,10 @@ from repro.fl import codec as fl_codec
 from repro.fl import staleness as fl_stale
 from repro.fl import transport as fl_transport
 from repro.fl.transport import DEFAULT_TRANSPORT, TransportConfig
+# the flight-recorder span layer (repro.obs.trace) is a leaf utility —
+# imports jax only, so `core` stays cycle-free; tracing is a jit-static
+# flag and the default (off) path traces the exact span-free program
+from repro.obs import trace as obs_trace
 from repro.resilience import faults as rfaults
 from repro.resilience.faults import FaultConfig
 from repro.resilience.guards import DEFAULT_GUARDS, GuardConfig
@@ -199,12 +204,13 @@ def fleet_episode(cfg: FCPOConfig, fleet: Fleet, rates: jnp.ndarray,
 
 
 @partial(jax.jit, static_argnums=0,
-         static_argnames=("transport", "guards", "faults"))
+         static_argnames=("transport", "guards", "faults", "trace"))
 def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
              transport: Optional[TransportConfig] = None,
              guards: Optional[GuardConfig] = None,
              faults: Optional[FaultConfig] = None,
-             byzantine=None, fault_key=None):
+             byzantine=None, fault_key=None, *, trace: bool = False,
+             trace_id=None, trace_when=None, trace_token=None):
     """One federated round: transport -> Eq. 7 selection -> Alg. 1
     aggregation -> Alg. 2 head fine-tuning.
 
@@ -225,10 +231,21 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
     into the decoded deltas, post-codec. The defaults (no faults, mean
     aggregation, guards on) compile to the exact pre-chaos round.
 
+    ``trace`` (jit-static) + ``trace_id`` (plain operand — the registered
+    ``repro.obs.trace.Tracer`` id, so swapping tracers never recompiles)
+    bracket the round's phases (uplink model, codec encode/decode,
+    Algorithm 1 aggregation, Algorithm 2 fine-tuning) with flight-recorder
+    spans; ``trace_when`` optionally samples emission at runtime. The
+    default (trace off) compiles to the exact span-free round.
+
     Returns (fleet, sel, fl_metrics) where ``sel`` is the (A,) aggregation
     mask and ``fl_metrics`` the per-round communication/defense metrics
     (``repro.fl.transport.FL_METRIC_KEYS``)."""
     transport = DEFAULT_TRANSPORT if transport is None else transport
+    if trace and trace_id is None:
+        raise ValueError("fl_round(trace=True) needs a trace_id operand "
+                         "(a registered repro.obs.trace.Tracer id)")
+    tok = None
     guards = DEFAULT_GUARDS if guards is None else guards
     byz_on = faults is not None and faults.byzantine_active
     a = fleet.pod_ids.shape[0]
@@ -250,6 +267,12 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
         rejected = rejected + n_dropped
 
     # --- communication model: payload sizes are static, links are per-agent
+    if trace:
+        # trace_token: the caller's enclosing span-begin token — making it a
+        # dep of the first inner begin orders the callbacks outer-begin ->
+        # inner-begin (unordered io_callbacks only order by data flow)
+        tok = obs_trace.span_begin("fl/uplink", trace_id, fleet.bandwidth,
+                                   trace_token, when=trace_when)
     up_bytes = fl_transport.agent_payload_bytes(params, transport,
                                                stacked=True)
     full_bytes = fl_transport.full_param_bytes(params, stacked=True)
@@ -258,6 +281,9 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
     uplink_s = fl_transport.uplink_seconds(up_bytes, fleet.bandwidth)
     on_time = fl_transport.on_time_mask(uplink_s, transport.deadline_s)
     fresh_ok = legacy_avail & on_time
+    if trace:
+        tok = obs_trace.span_end("fl/uplink", trace_id, tok, fresh_ok,
+                                 when=trace_when)
 
     # --- Eq. 7 selection. Sync rounds: a slow link emergently drops out of
     # selection. Async rounds: slow-but-alive clients stay selectable (they
@@ -299,10 +325,17 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
             rejected = rejected + jnp.sum(sel & ~ok).astype(jnp.float32)
             sel_agg = sel & ok
     else:
+        if trace:
+            tok = obs_trace.span_begin("fl/encode", trace_id, params, tok,
+                                       when=trace_when)
         base_g = jax.tree.map(lambda b: b[fleet.pod_ids], fleet.base_params)
         delta = jax.tree.map(jnp.subtract, params, base_g)
-        decoded, res_next = fl_codec.codec_roundtrip(delta, fleet.residuals,
-                                                     transport)
+        # bind the trace-id operand so a Pallas codec kernel called in here
+        # (transport.use_pallas) emits its kernel span against the same
+        # tracer — binding None (trace off) is a no-op
+        with obs_trace.bind_tid(trace_id if trace else None):
+            decoded, res_next = fl_codec.codec_roundtrip(
+                delta, fleet.residuals, transport)
         if byz_on:
             # corruption happens in transit, AFTER the honest client
             # encoded its delta and committed error feedback — the server
@@ -353,16 +386,30 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
             lambda nr, r: jnp.where(
                 transmitted.reshape((-1,) + (1,) * (nr.ndim - 1)), nr, r),
             res_next, fleet.residuals)
+        if trace:
+            tok = obs_trace.span_end("fl/encode", trace_id, tok, recon,
+                                     when=trace_when)
 
+    if trace:
+        tok = obs_trace.span_begin("fl/aggregate", trace_id, recon, tok,
+                                   when=trace_when)
     new_params, new_base = fed.aggregate(
         cfg, recon, fleet.base_params, sel_agg, head_losses,
         fleet.head_groups, fleet.pod_ids, fleet.n_pods,
         method=guards.agg, trim_frac=guards.trim_frac)
+    if trace:
+        tok = obs_trace.span_end("fl/aggregate", trace_id, tok, new_params,
+                                 when=trace_when)
+        tok = obs_trace.span_begin("fl/finetune", trace_id, new_params, tok,
+                                   when=trace_when)
 
     # Algorithm 2: local action-head fine-tuning on local experiences
     params, opt = jax.vmap(
         lambda p, o, r, m: finetune_heads(cfg, p, o, r, m)
     )(new_params, fleet.astate.opt, rollouts, fleet.masks)
+    if trace:
+        tok = obs_trace.span_end("fl/finetune", trace_id, tok, params,
+                                 when=trace_when)
 
     # FL-round cadence is the off-hot-path slot to resync the buffers'
     # streaming moments from their slots, bounding rank-1 float32 drift.
@@ -379,6 +426,11 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
         "fl_rejected": rejected,
         "fl_clipped": clipped,
     }
+    if trace:
+        # hand the final inner token back so the caller's enclosing span_end
+        # is ordered after the last inner end callback (popped before the
+        # metrics dict reaches the history)
+        fl_metrics["_trace_tok"] = tok
     fleet = fleet._replace(astate=astate, base_params=new_base,
                            residuals=residuals, pending=new_pending)
     return fleet, sel_agg, fl_metrics
@@ -422,14 +474,17 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                           faults: Optional[FaultConfig] = None,
                           guards: Optional[GuardConfig] = None,
                           episode_offset: int = 0,
-                          total_episodes: Optional[int] = None):
+                          total_episodes: Optional[int] = None,
+                          tracer=None):
     """The original Python-loop driver: one host dispatch per episode plus a
     per-metric host sync — O(n_episodes) dispatches. Kept as the equivalence
     oracle for ``train_fleet_scan`` (same seeds => same straggler draws,
     same fault plan). ``metrics_sink`` gets the same per-episode records as
     the scan driver's streaming tap, appended directly from the loop.
     ``faults``/``guards``/``episode_offset``/``total_episodes`` mirror
-    ``train_fleet_scan``."""
+    ``train_fleet_scan``. ``tracer`` records host-side episode / fl_round
+    spans (this driver dispatches per episode, so plain wall bracketing is
+    already phase-accurate; sampling follows ``span_sample_every``)."""
     backend = get_backend(env_backend)
     transport = DEFAULT_TRANSPORT if transport is None else transport
     faults, guards = _normalize_chaos(faults, guards)
@@ -449,6 +504,12 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     rng = np.random.default_rng(seed)
     history: Dict[str, list] = {}
     rounds = int(schedule[:episode_offset].sum())
+
+    def hspan(name, e):  # sampled host-side span, no-op without a tracer
+        if tracer is not None and e % tracer.span_sample_every == 0:
+            return tracer.span(name, cat="phase")
+        return nullcontext()
+
     for e in range(episode_offset):  # burn the pre-offset straggler draws
         if schedule[e]:
             rng.random(a)
@@ -456,8 +517,11 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
         i = e - episode_offset
         rates = traces[:, i * cfg.n_steps:(i + 1) * cfg.n_steps]
         prev_astate = fleet.astate
-        fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates,
-                                                 learn=learn, backend=backend)
+        with hspan("episode", e):
+            fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates,
+                                                     learn=learn,
+                                                     backend=backend)
+            jax.block_until_ready(metrics)
         ran = None
         if crash_on:
             fleet, ran, down = rfaults.apply_crashes(
@@ -470,11 +534,14 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
             fkey = (jax.random.fold_in(jax.random.PRNGKey(faults.seed), e)
                     if byz_on else None)
             pre_round = fleet.astate
-            fleet, _, fl_metrics = fl_round(
-                cfg, fleet, rollouts, avail, transport=transport,
-                guards=guards, faults=faults,
-                byzantine=jnp.asarray(plan.byzantine[e]) if byz_on else None,
-                fault_key=fkey)
+            with hspan("fl_round", e):
+                fleet, _, fl_metrics = fl_round(
+                    cfg, fleet, rollouts, avail, transport=transport,
+                    guards=guards, faults=faults,
+                    byzantine=(jnp.asarray(plan.byzantine[e]) if byz_on
+                               else None),
+                    fault_key=fkey)
+                jax.block_until_ready(fl_metrics)
             if crash_on:
                 # a down agent is offline: it must not receive the round's
                 # new model (it rejoins later via the step-① warm start)
@@ -541,10 +608,11 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
                  avail: jnp.ndarray, do_fl: jnp.ndarray, ep_idx: jnp.ndarray,
                  sink_id: jnp.ndarray, crash_eps: jnp.ndarray,
                  byz_eps: jnp.ndarray, part_eps: jnp.ndarray,
-                 rounds0: jnp.ndarray, learn: bool, backend: EnvBackend,
-                 transport: TransportConfig,
+                 rounds0: jnp.ndarray, trace_id: jnp.ndarray,
+                 trace_sample: jnp.ndarray, learn: bool,
+                 backend: EnvBackend, transport: TransportConfig,
                  faults: Optional[FaultConfig],
-                 guards: GuardConfig, stream: bool):
+                 guards: GuardConfig, stream: bool, trace: bool):
     """Scan body host fn. rates_eps: (n_eps, A, n_steps); avail/do_fl/ep_idx:
     pre-drawn availability bits, FL schedule, and (absolute) episode
     indices, consumed as scan xs. crash_eps/byz_eps/part_eps: the pre-drawn
@@ -553,7 +621,11 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
     counter so a resumed chunk keeps the hierarchical-merge cadence.
     ``stream`` (static) taps every episode's metrics out to the registered
     sink ``sink_id`` via an ordered host callback — the run is still ONE
-    dispatch, but the sink's JSONL file tails live."""
+    dispatch, but the sink's JSONL file tails live. ``trace`` (static) +
+    ``trace_id``/``trace_sample`` (operands) bracket the episode / FL-round
+    / pod-merge phases with flight-recorder spans on every
+    ``trace_sample``-th episode — same one-dispatch run, and the trace-off
+    program is the exact span-free one."""
     crash_on = faults is not None and faults.crash_active
     byz_on = faults is not None and faults.byzantine_active
     part_on = faults is not None and faults.partition_active
@@ -561,9 +633,16 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
     def body(carry, xs):
         flt, rounds = carry
         rates, av, fl, ep_i, crash, byz, px = xs
+        when = (ep_i % trace_sample == 0) if trace else None
+        if trace:
+            tok_ep = obs_trace.span_begin("episode", trace_id, rates,
+                                          when=when)
         prev_astate = flt.astate
         flt, rollouts, metrics = fleet_episode(cfg, flt, rates, learn=learn,
                                                backend=backend)
+        if trace:
+            tok_ep = obs_trace.span_end("episode", trace_id, tok_ep,
+                                        metrics, when=when)
         ran = down = None
         if crash_on:
             flt, ran, down = rfaults.apply_crashes(faults, prev_astate, flt,
@@ -575,10 +654,24 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
             fkey = (jax.random.fold_in(jax.random.PRNGKey(faults.seed), ep_i)
                     if byz_on else None)
             pre_round = f.astate
+            if trace:
+                tok_fl = obs_trace.span_begin("fl_round", trace_id,
+                                              f.bandwidth, tok_ep, when=when)
             f, _, flm = fl_round(cfg, f, rollouts, av, transport=transport,
                                  guards=guards, faults=faults,
                                  byzantine=byz if byz_on else None,
-                                 fault_key=fkey)
+                                 fault_key=fkey, trace=trace,
+                                 trace_id=trace_id if trace else None,
+                                 trace_when=when,
+                                 trace_token=tok_fl if trace else None)
+            if trace:
+                # the popped inner token orders this end after the round's
+                # last inner end callback (and keeps the metrics dict shapes
+                # identical across the fl/no-fl cond branches)
+                tok_fl = obs_trace.span_end("fl_round", trace_id, tok_fl,
+                                            flm.pop("_trace_tok"),
+                                            flm["fl_payload_bytes"],
+                                            when=when)
             if crash_on:
                 # a down agent is offline: it must not receive the round's
                 # new model (it rejoins later via the step-① warm start)
@@ -586,8 +679,17 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
                     down, pre_round, f.astate))
             rnd = rnd + 1
             if f.n_pods > 1:
-                merge = (lambda g: pod_merge(cfg, g, px, faults=faults)) \
-                    if part_on else (lambda g: pod_merge(cfg, g))
+                def merge(g):
+                    if trace:
+                        tm = obs_trace.span_begin("pod_merge", trace_id,
+                                                  g.base_params, tok_fl,
+                                                  when=when)
+                    g = (pod_merge(cfg, g, px, faults=faults) if part_on
+                         else pod_merge(cfg, g))
+                    if trace:
+                        obs_trace.span_end("pod_merge", trace_id, tm,
+                                           g.base_params, when=when)
+                    return g
                 f = jax.lax.cond(rnd % cfg.hierarchical_period == 0,
                                  merge, lambda g: g, f)
             return (f, rnd), flm
@@ -621,11 +723,85 @@ _SCAN_FNS: Dict[bool, Any] = {}
 
 def _scan_fn(donate: bool):
     if donate not in _SCAN_FNS:
-        kw = dict(static_argnums=(0, 11, 12, 13, 14, 15, 16))
+        kw = dict(static_argnums=(0, 13, 14, 15, 16, 17, 18, 19))
         if donate:
             kw["donate_argnums"] = (1,)
         _SCAN_FNS[donate] = jax.jit(_scan_driver, **kw)
     return _SCAN_FNS[donate]
+
+
+def _prep_scan_args(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
+                    learn, federated, straggler_prob, seed, mesh,
+                    env_backend, transport, faults, guards,
+                    episode_offset, total_episodes,
+                    sink_id, stream, tracer):
+    """Host-side argument prep shared by ``train_fleet_scan`` and
+    ``lower_fleet_scan``: FL schedule, availability draws, fault plan,
+    episode-major rate reshape, optional mesh sharding — returns the exact
+    positional argument tuple for ``_scan_driver``/``_scan_fn``."""
+    backend = get_backend(env_backend)
+    transport = DEFAULT_TRANSPORT if transport is None else transport
+    faults, guards = _normalize_chaos(faults, guards)
+    a, total = traces.shape
+    n_eps = total // cfg.n_steps
+    total_eps = (episode_offset + n_eps if total_episodes is None
+                 else total_episodes)
+    if total_eps < episode_offset + n_eps:
+        raise ValueError(f"total_episodes={total_eps} < episode_offset="
+                         f"{episode_offset} + {n_eps} trace episodes")
+    schedule = fed.fl_schedule(cfg, total_eps, federated=federated,
+                               learn=learn)
+    avail = fed.draw_availability(schedule, a, straggler_prob, seed)
+    plan = rfaults.draw_fault_plan(schedule, a, fleet.n_pods, faults)
+    sl = slice(episode_offset, episode_offset + n_eps)
+    rounds0 = int(schedule[:episode_offset].sum())
+
+    rates_eps = jnp.asarray(traces[:, :n_eps * cfg.n_steps]).reshape(
+        a, n_eps, cfg.n_steps).transpose(1, 0, 2)
+    avail = jnp.asarray(avail[sl])
+    do_fl = jnp.asarray(schedule[sl])
+    ep_idx = jnp.arange(episode_offset, episode_offset + n_eps,
+                        dtype=jnp.int32)
+    crash_eps = jnp.asarray(plan.crash[sl])
+    byz_eps = jnp.asarray(plan.byzantine[sl])
+    part_eps = jnp.asarray(plan.partition[sl])
+
+    if mesh is not None:
+        fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
+        xs_shard = lambda x: jax.device_put(
+            x, NamedSharding(mesh, shd.agent_batch_spec(x.shape, mesh)))
+        rates_eps, avail = xs_shard(rates_eps), xs_shard(avail)
+
+    trace = tracer is not None
+    tid = tracer.tid if trace else 0
+    tsamp = tracer.span_sample_every if trace else 1
+    return (cfg, fleet, rates_eps, avail, do_fl, ep_idx,
+            jnp.asarray(sink_id, jnp.int32), crash_eps, byz_eps, part_eps,
+            jnp.asarray(rounds0, jnp.int32), jnp.asarray(tid, jnp.int32),
+            jnp.asarray(tsamp, jnp.int32), learn, backend, transport,
+            faults, guards, stream, trace)
+
+
+def lower_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
+                     learn: bool = True, federated: bool = True,
+                     straggler_prob: float = 0.0, seed: int = 0,
+                     mesh=None, donate: bool = True, env_backend=None,
+                     transport: Optional[TransportConfig] = None,
+                     faults: Optional[FaultConfig] = None,
+                     guards: Optional[GuardConfig] = None,
+                     episode_offset: int = 0,
+                     total_episodes: Optional[int] = None):
+    """Lower (without running) the exact scanned-driver program that
+    ``train_fleet_scan`` would dispatch for these arguments — including
+    buffer donation — and return the ``jax.stages.Lowered``. This is the
+    entry point ``repro.obs.profile`` uses for XLA cost/memory accounting
+    and the donation audit: the program analyzed is the program trained."""
+    args = _prep_scan_args(cfg, fleet, traces, learn, federated,
+                           straggler_prob, seed, mesh, env_backend,
+                           transport, faults, guards, episode_offset,
+                           total_episodes, sink_id=0, stream=False,
+                           tracer=None)
+    return _scan_fn(bool(donate)).lower(*args)
 
 
 def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
@@ -638,7 +814,8 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                      faults: Optional[FaultConfig] = None,
                      guards: Optional[GuardConfig] = None,
                      episode_offset: int = 0,
-                     total_episodes: Optional[int] = None):
+                     total_episodes: Optional[int] = None,
+                     tracer=None):
     """Scanned fleet driver: episodes over ``traces`` (A, total_steps), FL
     every ``fl_every`` episodes (stragglers masked by pre-drawn availability
     bits), cross-pod merge every ``hierarchical_period`` rounds — all inside
@@ -677,58 +854,36 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     hierarchical-merge counter all follow the *absolute* episode index, so
     a run chunked across checkpoint save/restore boundaries is
     value-identical to the uninterrupted run.
+    ``tracer``: a ``repro.obs.trace.Tracer`` — flight-recorder spans for
+    the episode / FL-round (encode, uplink, aggregate, finetune) /
+    pod-merge phases, emitted from inside the single dispatch by host
+    callbacks on every ``tracer.span_sample_every``-th episode. Off (None)
+    by default, in which case the traced program is exactly the span-free
+    one; the tracer object is addressed by a non-static integer id, so
+    re-tracing the same-shaped run with a fresh tracer never recompiles.
     Returns (fleet, history) with history as per-episode numpy arrays,
     fetched in a single device->host transfer."""
-    backend = get_backend(env_backend)
-    transport = DEFAULT_TRANSPORT if transport is None else transport
-    faults, guards = _normalize_chaos(faults, guards)
-    a, total = traces.shape
-    n_eps = total // cfg.n_steps
-    total_eps = (episode_offset + n_eps if total_episodes is None
-                 else total_episodes)
-    if total_eps < episode_offset + n_eps:
-        raise ValueError(f"total_episodes={total_eps} < episode_offset="
-                         f"{episode_offset} + {n_eps} trace episodes")
-    schedule = fed.fl_schedule(cfg, total_eps, federated=federated,
-                               learn=learn)
-    avail = fed.draw_availability(schedule, a, straggler_prob, seed)
-    plan = rfaults.draw_fault_plan(schedule, a, fleet.n_pods, faults)
-    sl = slice(episode_offset, episode_offset + n_eps)
-    rounds0 = int(schedule[:episode_offset].sum())
-
-    rates_eps = jnp.asarray(traces[:, :n_eps * cfg.n_steps]).reshape(
-        a, n_eps, cfg.n_steps).transpose(1, 0, 2)
-    avail = jnp.asarray(avail[sl])
-    do_fl = jnp.asarray(schedule[sl])
-    ep_idx = jnp.arange(episode_offset, episode_offset + n_eps,
-                        dtype=jnp.int32)
-    crash_eps = jnp.asarray(plan.crash[sl])
-    byz_eps = jnp.asarray(plan.byzantine[sl])
-    part_eps = jnp.asarray(plan.partition[sl])
-
-    if mesh is not None:
-        fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
-        xs_shard = lambda x: jax.device_put(
-            x, NamedSharding(mesh, shd.agent_batch_spec(x.shape, mesh)))
-        rates_eps, avail = xs_shard(rates_eps), xs_shard(avail)
-
     if donate is None:
         donate = jax.default_backend() != "cpu"
     stream = metrics_sink is not None
     sid = _register_sink(metrics_sink) if stream else 0
+    args = _prep_scan_args(cfg, fleet, traces, learn, federated,
+                           straggler_prob, seed, mesh, env_backend,
+                           transport, faults, guards, episode_offset,
+                           total_episodes, sink_id=sid, stream=stream,
+                           tracer=tracer)
     try:
-        fleet, history = _scan_fn(bool(donate))(
-            cfg, fleet, rates_eps, avail, do_fl, ep_idx,
-            jnp.asarray(sid, jnp.int32), crash_eps, byz_eps, part_eps,
-            jnp.asarray(rounds0, jnp.int32), learn, backend, transport,
-            faults, guards, stream)
-        history = jax.device_get(history)
+        with obs_trace.activate(tracer):
+            fleet, history = _scan_fn(bool(donate))(*args)
+            history = jax.device_get(history)
     finally:
         if stream:
             # the history fetch blocks on the compute; the callback effects
             # drain behind it — barrier before releasing the sink slot
             jax.effects_barrier()
             _METRIC_SINKS.pop(sid, None)
+        if tracer is not None:
+            tracer.drain()
     return fleet, history
 
 
@@ -737,7 +892,7 @@ def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                 straggler_prob: float = 0.0, seed: int = 0,
                 env_backend=None, transport: Optional[TransportConfig] = None,
                 metrics_sink=None, faults: Optional[FaultConfig] = None,
-                guards: Optional[GuardConfig] = None):
+                guards: Optional[GuardConfig] = None, tracer=None):
     """Compatibility entry point — delegates to the scanned driver. Buffer
     donation stays off so callers may keep using the input fleet (forking a
     fleet into warm/cold copies is a common pattern in the benchmarks)."""
@@ -746,4 +901,4 @@ def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                             straggler_prob=straggler_prob, seed=seed,
                             donate=False, env_backend=env_backend,
                             transport=transport, metrics_sink=metrics_sink,
-                            faults=faults, guards=guards)
+                            faults=faults, guards=guards, tracer=tracer)

@@ -228,7 +228,11 @@ def sanitize_envelope(prev_envelope, warn=None):
     Returns the envelope when it is usable (a dict whose ``results`` is a
     list) and None otherwise — a missing, truncated, or non-envelope file
     degrades the gate to "no baseline" with a warning instead of crashing
-    CI. ``warn`` is an optional ``print``-like callable."""
+    CI. An envelope measured on a DIFFERENT jax backend or device count
+    (``save_bench`` stamps both) is also refused: timings and memory moved
+    for hardware reasons, so gating against it would flag phantom
+    regressions (or hide real ones) on cross-backend noise. ``warn`` is an
+    optional ``print``-like callable."""
     if prev_envelope is None:
         return None
     if (not isinstance(prev_envelope, dict)
@@ -237,6 +241,19 @@ def sanitize_envelope(prev_envelope, warn=None):
             warn("leaderboard: previous envelope is not a results envelope "
                  "— treating as no baseline")
         return None
+    import jax
+
+    here = {"backend": jax.default_backend(),
+            "device_count": jax.device_count()}
+    for key, cur in here.items():
+        prev = prev_envelope.get(key)
+        # legacy envelopes (pre device_count stamp) pass: nothing to refuse
+        if prev is not None and prev != cur:
+            if warn is not None:
+                warn(f"leaderboard: previous envelope is from {key}="
+                     f"{prev!r} but this run is {key}={cur!r} — refusing "
+                     f"the cross-backend diff, treating as no baseline")
+            return None
     return prev_envelope
 
 

@@ -31,17 +31,51 @@ META_KIND = "meta"
 class MetricsSink:
     """Append-only JSONL metrics writer. Records are flushed per line so a
     reader (``launch/watch.py --follow``) sees them while the run is live.
-    Usable as a context manager; ``append`` after ``close`` raises."""
+    Usable as a context manager; ``append`` after ``close`` raises.
 
-    def __init__(self, path: str, meta: Optional[Dict[str, Any]] = None):
+    ``resume=True`` continues an existing file instead of truncating it —
+    the checkpoint auto-resume path (``train_fleet.py --ckpt-dir``) relies
+    on this to keep the episodes recorded before a kill. The existing meta
+    header is validated against ``meta``: every key both sides share must
+    agree (a resumed run with a different shape/seed would silently splice
+    incomparable records), and the header must exist and parse. A missing
+    file resumes as a fresh write."""
+
+    def __init__(self, path: str, meta: Optional[Dict[str, Any]] = None,
+                 resume: bool = False):
         self.path = path
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
-        self._f = open(path, "w")
-        self.n_records = 0
         header = {"kind": META_KIND}
         header.update(meta or {})
-        self._write(header)
+        if resume and os.path.exists(path):
+            old_meta, records = read_metrics(path)
+            if not old_meta:
+                raise ValueError(
+                    f"cannot resume metrics file {path}: no parseable "
+                    f"{META_KIND} header on line 1")
+            for k in set(old_meta) & set(meta or {}):
+                if old_meta[k] != (meta or {})[k]:
+                    raise ValueError(
+                        f"cannot resume metrics file {path}: meta mismatch "
+                        f"on {k!r} (file has {old_meta[k]!r}, run has "
+                        f"{(meta or {})[k]!r})")
+            with open(path, "rb") as f:
+                f.seek(0, os.SEEK_END)
+                size = f.tell()
+                f.seek(max(size - 1, 0))
+                torn_tail = size > 0 and f.read(1) != b"\n"
+            self._f = open(path, "a")
+            if torn_tail:
+                # a kill mid-append left a partial line with no newline;
+                # without this the next record would merge into it and BOTH
+                # lines would be lost to the reader
+                self._f.write("\n")
+            self.n_records = len(records)
+        else:
+            self._f = open(path, "w")
+            self.n_records = 0
+            self._write(header)
 
     def _write(self, obj: Dict[str, Any]):
         self._f.write(json.dumps(obj, sort_keys=True, default=float) + "\n")
@@ -92,12 +126,23 @@ def tail_summary(records: List[Dict[str, Any]], k: int = 10
     out: Dict[str, Dict[str, float]] = {}
     if not records:
         return out
-    keys = [key for key in records[-1]
-            if key != "episode" and isinstance(records[-1][key], (int, float))]
+    num = lambda v: isinstance(v, (int, float)) and not isinstance(v, bool)
+    # keys from ANY record that held a numeric value (first-seen order): a
+    # garbled newest record must not hide a metric the run has been logging
+    keys, seen = [], set()
+    for r in records:
+        for key, v in r.items():
+            if key != "episode" and key not in seen and num(v):
+                seen.add(key)
+                keys.append(key)
     tail = records[-k:]
     for key in keys:
-        vals = [r[key] for r in records if key in r]
-        tvals = [r[key] for r in tail if key in r]
+        # a newer writer may emit non-numeric values for a key an older
+        # record held as a float (or vice versa) — skip those, never crash
+        vals = [r[key] for r in records if num(r.get(key))]
+        tvals = [r[key] for r in tail if num(r.get(key))]
+        if not vals:
+            continue
         out[key] = {"last": float(vals[-1]),
                     "tail_mean": float(sum(tvals) / max(len(tvals), 1)),
                     "mean": float(sum(vals) / max(len(vals), 1))}

@@ -6,6 +6,17 @@ call sites compile to Mosaic. ``REPRO_PALLAS_INTERPRET=0`` flips to compiled
 mode. The model code defaults to the jnp reference path under dry-run
 (identical math — see DESIGN.md §6) and switches to these via
 ``use_pallas=True``.
+
+Flight-recorder hook: every wrapper consults
+``repro.obs.trace.kernel_trace_tid()``. When it returns None (the default:
+no active tracer, or inside an un-instrumented trace) the call goes through
+the same cached jit wrapper as before this layer existed — the exact
+pre-observability program. When a tracer with ``kernel_spans=True`` is
+active at the top level (or an instrumented caller has bound a trace-id via
+``bind_tid``), the call routes to a *traced twin* — same kernel, bracketed
+by ``kernel/<name>`` spans — jitted separately with the trace-id as a plain
+operand, so per-kernel timing never recompiles per tracer and never leaks
+into the untraced cache.
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ from repro.kernels import diversity as _div
 from repro.kernels import flash_attention as _fa
 from repro.kernels import packing as _pack
 from repro.kernels import queue_advance as _qa
+from repro.obs import trace as obs_trace
 
 
 def _interpret_default() -> bool:
@@ -29,51 +41,129 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
-def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
+def _twins(name, impl, static_argnames=()):
+    """Build (untraced, traced) jitted variants of kernel ``impl``. The
+    untraced one is the original wrapper; the traced one takes the trace-id
+    as its first (non-static) operand and brackets the kernel with
+    ``kernel/<name>`` spans."""
+    untraced = functools.partial(jax.jit, static_argnames=static_argnames)(
+        impl) if static_argnames else jax.jit(impl)
+
+    def traced_impl(tid, *args, **kw):
+        tok = obs_trace.span_begin(f"kernel/{name}", tid, args,
+                                   cat="kernel")
+        out = impl(*args, **kw)
+        obs_trace.span_end(f"kernel/{name}", tid, tok, out)
+        return out
+
+    traced = (functools.partial(jax.jit, static_argnames=static_argnames)(
+        traced_impl) if static_argnames else jax.jit(traced_impl))
+    return untraced, traced
+
+
+def _flash_impl(q, k, v, *, causal=True, bq=128, bk=128):
     return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
                                interpret=_interpret_default())
 
 
-@functools.partial(jax.jit, static_argnames=("bk",))
-def decode_attention(q, k_cache, v_cache, kv_len, *, bk=512):
+def _decode_impl(q, k_cache, v_cache, kv_len, *, bk=512):
     return _dec.decode_attention(q, k_cache, v_cache, kv_len, bk=bk,
                                  interpret=_interpret_default())
 
 
-@jax.jit
-def pack(tokens, indices):
+def _pack_impl(tokens, indices):
     return _pack.pack(tokens, indices, interpret=_interpret_default())
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "beta", "ridge"))
-def diversity_insert(states, probs, score, filled, s_sum, s_outer, p_sum,
-                     n_filled, cand_states, cand_probs, *, alpha, beta,
-                     ridge=0.1):
-    """Fused streaming diversity-buffer insert (Eq. 6): score ->
-    argmin-evict -> scatter over T candidates per agent, one kernel call for
-    the whole agent batch. Oracle: ``repro.kernels.ref.diversity_insert_ref``."""
+def _diversity_impl(states, probs, score, filled, s_sum, s_outer, p_sum,
+                    n_filled, cand_states, cand_probs, *, alpha, beta,
+                    ridge=0.1):
     return _div.diversity_insert(states, probs, score, filled, s_sum,
                                  s_outer, p_sum, n_filled, cand_states,
                                  cand_probs, alpha=alpha, beta=beta,
                                  ridge=ridge, interpret=_interpret_default())
 
 
-@functools.partial(jax.jit, static_argnames=("codec", "k"))
+def _delta_codec_impl(delta, residual, *, codec, k=1):
+    return _codec.delta_codec(delta, residual, codec=codec, k=k,
+                              interpret=_interpret_default())
+
+
+def _queue_advance_impl(arrive, counters, credits, lat_sum, hist, arrivals,
+                        caps):
+    return _qa.queue_advance(arrive, counters, credits, lat_sum, hist,
+                             arrivals, caps, interpret=_interpret_default())
+
+
+_FLASH = _twins("flash_attention", _flash_impl, ("causal", "bq", "bk"))
+_DECODE = _twins("decode_attention", _decode_impl, ("bk",))
+_PACK = _twins("pack", _pack_impl)
+_DIVERSITY = _twins("diversity_insert", _diversity_impl,
+                    ("alpha", "beta", "ridge"))
+_DELTA_CODEC = _twins("delta_codec", _delta_codec_impl, ("codec", "k"))
+_QUEUE_ADVANCE = _twins("queue_advance", _queue_advance_impl)
+
+
+def _dispatch(twins, args, kw):
+    tid = obs_trace.kernel_trace_tid()
+    if tid is None:
+        return twins[0](*args, **kw)
+    return twins[1](tid, *args, **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
+    return _dispatch(_FLASH, (q, k, v),
+                     dict(causal=causal, bq=bq, bk=bk))
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, bk=512):
+    return _dispatch(_DECODE, (q, k_cache, v_cache, kv_len), dict(bk=bk))
+
+
+def pack(tokens, indices):
+    return _dispatch(_PACK, (tokens, indices), {})
+
+
+def diversity_insert(states, probs, score, filled, s_sum, s_outer, p_sum,
+                     n_filled, cand_states, cand_probs, *, alpha, beta,
+                     ridge=0.1):
+    """Fused streaming diversity-buffer insert (Eq. 6): score ->
+    argmin-evict -> scatter over T candidates per agent, one kernel call for
+    the whole agent batch. Oracle: ``repro.kernels.ref.diversity_insert_ref``."""
+    return _dispatch(_DIVERSITY,
+                     (states, probs, score, filled, s_sum, s_outer, p_sum,
+                      n_filled, cand_states, cand_probs),
+                     dict(alpha=alpha, beta=beta, ridge=ridge))
+
+
 def delta_codec(delta, residual, *, codec, k=1):
     """Fused FL transport codec (error feedback + encode + decode): one
     kernel call per fleet turns the flat (A, L) parameter deltas into their
     lossy on-wire round trip plus the carried residuals. Oracle:
     ``repro.kernels.ref.delta_codec_ref``."""
-    return _codec.delta_codec(delta, residual, codec=codec, k=k,
-                              interpret=_interpret_default())
+    return _dispatch(_DELTA_CODEC, (delta, residual),
+                     dict(codec=codec, k=k))
 
 
-@jax.jit
 def queue_advance(arrive, counters, credits, lat_sum, hist, arrivals, caps):
     """Fused request-level data-plane advance (digital twin): admit ->
     pre-process -> batch-form -> inference -> post-process -> deadline check,
     K microticks per agent in one kernel call for the whole agent batch.
     Oracle: ``repro.kernels.ref.queue_advance_ref``."""
-    return _qa.queue_advance(arrive, counters, credits, lat_sum, hist,
-                             arrivals, caps, interpret=_interpret_default())
+    return _dispatch(_QUEUE_ADVANCE,
+                     (arrive, counters, credits, lat_sum, hist, arrivals,
+                      caps), {})
+
+
+# name -> untraced jit wrapper — the profiler (repro.obs.profile) uses
+# these to lower and cost/memory-account every kernel variant; they are the
+# exact objects the dispatchers call, so the analyzed program is the one
+# that runs.
+KERNEL_JITS = {
+    "flash_attention": _FLASH[0],
+    "decode_attention": _DECODE[0],
+    "pack": _PACK[0],
+    "diversity_insert": _DIVERSITY[0],
+    "delta_codec": _DELTA_CODEC[0],
+    "queue_advance": _QUEUE_ADVANCE[0],
+}

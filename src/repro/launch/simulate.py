@@ -53,12 +53,28 @@ def main(argv=None):
                          "queue_advance kernel")
     ap.add_argument("--compare-fluid", action="store_true",
                     help="also evaluate on the fluid MDP and print the gap")
+    ap.add_argument("--attribution", action="store_true",
+                    help="record per-microtick counters and print the "
+                         "per-request stage latency decomposition "
+                         "(jnp path only)")
+    ap.add_argument("--attr-sample", type=int, default=16,
+                    help="keep every Nth request in the attribution "
+                         "records / Chrome trace")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="write the sampled request lifecycles as Chrome "
+                         "trace-event JSON (open in Perfetto); implies "
+                         "--attribution")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.intervals < 1:
         ap.error("--intervals must be >= 1")
     if args.ring <= 0 or args.ring & (args.ring - 1):
         ap.error("--ring must be a positive power of two")
+    if args.trace_out:
+        args.attribution = True
+    if args.attribution and args.pallas:
+        ap.error("--attribution needs the jnp data plane (drop --pallas): "
+                 "the fused kernel advances whole intervals per call")
 
     cfg = FCPOConfig()
     if args.compare_fluid and args.intervals % cfg.n_steps:
@@ -86,10 +102,12 @@ def main(argv=None):
           f"pallas={args.pallas}, trained={args.train_episodes} eps "
           f"on {train_be.name}, backend={jax.default_backend()}")
     t0 = time.time()
-    state, _, summ = simulate_fleet(cfg, sp, fleet.astate.params,
-                                    fleet.masks, fleet.env_params, traces,
-                                    jax.random.PRNGKey(args.seed + 3),
-                                    use_pallas=args.pallas)
+    state, history, summ = simulate_fleet(cfg, sp, fleet.astate.params,
+                                          fleet.masks, fleet.env_params,
+                                          traces,
+                                          jax.random.PRNGKey(args.seed + 3),
+                                          use_pallas=args.pallas,
+                                          record_ticks=args.attribution)
     jax.block_until_ready(state.counters)
     wall = time.time() - t0
     ticks = args.intervals * sp.k_ticks
@@ -110,6 +128,29 @@ def main(argv=None):
     # >1% right-censored completions triggers warn_if_censored inside
     # simulate_fleet (one shared check); the hist_censored row above is the
     # always-on surface.
+
+    if args.attribution:
+        from repro.obs import requests as obs_requests
+        from repro.sim.metrics import stage_breakdown_table
+
+        attr = obs_requests.attribute_run(history, state,
+                                          sample_every=args.attr_sample)
+        bad = [i for i, rep in enumerate(attr["conservation"])
+               if not rep["ok"]]
+        dec = obs_requests.stage_decomposition(attr["agents"], sp.dt)
+        print(f"\nrequest attribution ({len(attr['records'])} sampled "
+              f"records, 1/{args.attr_sample}; conservation "
+              f"{'FAILED for agents ' + str(bad) if bad else 'exact'})")
+        print(stage_breakdown_table(dec))
+        if args.trace_out:
+            from repro.obs.trace import Tracer
+
+            with Tracer() as tr:
+                n = obs_requests.records_to_chrome(tr, attr["records"],
+                                                   sp.dt)
+                tr.export(args.trace_out)
+            print(f"wrote {n} request slices -> {args.trace_out} "
+                  f"(open in Perfetto / chrome://tracing)")
 
     if args.compare_fluid:
         hist = _fluid_eval(cfg, fleet, traces)

@@ -119,6 +119,14 @@ def main(argv=None):
                          "fl_payload_bytes, miss/stale rates, ...) to this "
                          "JSONL file while training runs; tail it live with "
                          "python -m repro.launch.watch <file> --follow")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="flight recorder: record phase spans (episode, "
+                         "fl_round encode/uplink/aggregate, pod merge) "
+                         "from inside the compiled run and write Chrome "
+                         "trace-event JSON here (open in Perfetto)")
+    ap.add_argument("--trace-sample", type=int, default=1,
+                    help="record spans only on every Nth episode (runtime "
+                         "sampling — changing it never recompiles)")
     # --- chaos layer: fault injection (repro.resilience.FaultConfig) ---
     ap.add_argument("--fault-crash-prob", type=float, default=0.0,
                     help="per-agent per-episode crash probability: the "
@@ -220,6 +228,8 @@ def main(argv=None):
                  "driver; drop --driver reference")
     if args.ckpt_every < 0 or args.stop_after < 0 or args.keep_last < 1:
         ap.error("--ckpt-every/--stop-after must be >= 0, --keep-last >= 1")
+    if args.trace_sample < 1:
+        ap.error("--trace-sample must be >= 1")
 
     cfg = FCPOConfig() if args.fl_every is None else \
         FCPOConfig(fl_every=args.fl_every)
@@ -264,14 +274,28 @@ def main(argv=None):
               straggler_prob=args.straggler_prob, seed=args.seed,
               env_backend=backend, transport=transport,
               faults=faults if faults.active else None, guards=guards)
+    # detect the auto-resume BEFORE opening the metrics sink: a resumed run
+    # must append to the metrics file, not truncate the pre-kill episodes
+    resume_from = (ckpt_mod.latest_step(args.ckpt_dir) or 0) \
+        if args.ckpt_dir else 0
     sink = None
     if args.metrics_out:
         sink = MetricsSink(args.metrics_out, meta=dict(
             agents=args.agents, pods=args.pods, episodes=args.episodes,
             driver=args.driver, env_backend=backend.name,
             scenario=args.scenario, fl_codec=args.fl_codec,
-            robust_agg=args.robust_agg, seed=args.seed))
+            robust_agg=args.robust_agg, seed=args.seed),
+            resume=resume_from > 0)
+        if resume_from > 0 and sink.n_records:
+            print(f"metrics resume: appending to {args.metrics_out} "
+                  f"({sink.n_records} episodes already recorded)")
         kw["metrics_sink"] = sink
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer(span_sample_every=args.trace_sample)
+        kw["tracer"] = tracer
     t0 = time.time()
     try:
         if args.ckpt_dir:
@@ -279,7 +303,7 @@ def main(argv=None):
             # [0, episodes); each chunk replays its slice with the absolute
             # episode_offset so straggler draws, fault plans, and merge
             # cadence match the uninterrupted run exactly.
-            start = ckpt_mod.latest_step(args.ckpt_dir) or 0
+            start = resume_from
             if start >= args.episodes:
                 print(f"checkpoint step {start} >= --episodes "
                       f"{args.episodes}: run already complete, nothing to do")
@@ -322,6 +346,12 @@ def main(argv=None):
     finally:
         if sink is not None:
             sink.close()
+        if tracer is not None:
+            tracer.export(args.trace_out)
+            print(f"flight recorder: "
+                  f"{len(tracer.chrome_events())} span events -> "
+                  f"{args.trace_out} (open in Perfetto)")
+            tracer.close()
     wall = time.time() - t0
 
     n_run = len(np.asarray(hist["reward"]))

@@ -27,15 +27,24 @@ WATCH_METRICS = ("reward", "throughput", "effective_throughput", "latency",
 
 def render(path: str, tail_k: int, metrics=WATCH_METRICS) -> str:
     """One status report for the metrics file — the string ``main`` prints.
-    Pure function of the file contents so tests can diff it."""
+    Pure function of the file contents so tests can diff it.
+
+    Degrades instead of crashing on the live-file edge cases: a meta-only
+    file (run killed before episode 0 landed) renders a "no records yet"
+    line, and metric keys this watcher does not know (a newer writer, or
+    non-numeric values) are skipped rather than garbling the table."""
     meta, records = read_metrics(path)
     lines = []
     if meta:
         lines.append("run: " + "  ".join(
             f"{k}={meta[k]}" for k in sorted(meta)))
+    if not records:
+        lines.append("no records yet (run warming up, or killed before "
+                     "episode 0) — retry with --follow")
+        return "\n".join(lines)
     lines.append(f"episodes recorded: {len(records)}")
     summary = tail_summary(records, k=tail_k)
-    shown = [m for m in metrics if m in summary] or sorted(summary)
+    shown = [m for m in metrics if m in summary]
     if shown:
         lines.append(f"{'metric':24s}{'last':>12s}"
                      f"{f'tail[{tail_k}]':>12s}{'mean':>12s}")

@@ -24,7 +24,7 @@ from repro.sim import metrics as sim_metrics
 from repro.sim.state import (SimParams, SimState, action_caps,
                              effective_queue_cap, sim_init, spread_arrivals,
                              warn_if_ring_clamps)
-from repro.sim.step import sim_interval
+from repro.sim.step import sim_interval, sim_interval_recorded
 
 
 def sim_observe(cfg: FCPOConfig, sp: SimParams, ep: EnvParams,
@@ -40,9 +40,11 @@ def sim_observe(cfg: FCPOConfig, sp: SimParams, ep: EnvParams,
                           slo_s=ep.slo_s)
 
 
-@partial(jax.jit, static_argnums=(0, 1), static_argnames=("use_pallas",))
+@partial(jax.jit, static_argnums=(0, 1),
+         static_argnames=("use_pallas", "record_ticks"))
 def _simulate(cfg: FCPOConfig, sp: SimParams, params, masks: ActionMask,
-              env_params: EnvParams, traces, key, use_pallas: bool = False):
+              env_params: EnvParams, traces, key, use_pallas: bool = False,
+              record_ticks: bool = False):
     a = traces.shape[0]
     state0 = jax.vmap(lambda _: sim_init(sp))(jnp.arange(a))
 
@@ -59,7 +61,11 @@ def _simulate(cfg: FCPOConfig, sp: SimParams, params, masks: ActionMask,
             lambda e, ac: action_caps(cfg, sp, e, ac))(env_params, actions)
         arrivals, phase = jax.vmap(
             lambda r, ph: spread_arrivals(sp, r, ph))(rate, phase)
-        state2 = sim_interval(state, arrivals, caps, use_pallas)
+        if record_ticks:
+            state2, ticks = jax.vmap(sim_interval_recorded)(state, arrivals,
+                                                            caps)
+        else:
+            state2 = sim_interval(state, arrivals, caps, use_pallas)
 
         d_comp = (state2.completed - state.completed).astype(jnp.float32)
         d_drop = state2.dropped - state.dropped
@@ -74,6 +80,9 @@ def _simulate(cfg: FCPOConfig, sp: SimParams, params, masks: ActionMask,
             "pre_q": state2.pre_q.astype(jnp.float32),
             "post_q": state2.post_q.astype(jnp.float32),
         }
+        if record_ticks:
+            ys["tick_counters"] = ticks  # (A, K, SIM_NCOUNTERS) int32
+            ys["caps"] = caps            # (A, SIM_NCAPS) — slo at the tick
         return (state2, d_drop, actions, phase, rng), ys
 
     init = (state0, jnp.zeros((a,), jnp.int32),
@@ -84,7 +93,7 @@ def _simulate(cfg: FCPOConfig, sp: SimParams, params, masks: ActionMask,
 
 def simulate_fleet(cfg: FCPOConfig, sp: SimParams, params,
                    masks: ActionMask, env_params: EnvParams, traces, key,
-                   use_pallas: bool = False
+                   use_pallas: bool = False, record_ticks: bool = False
                    ) -> Tuple[SimState, Dict, Dict]:
     """Drive a fleet of trained policies through the request-level twin.
 
@@ -92,19 +101,33 @@ def simulate_fleet(cfg: FCPOConfig, sp: SimParams, params,
     ``Fleet``'s ``astate.params`` / ``masks`` / ``env_params``); traces:
     (A, T) control-interval arrival rates (requests/s). Returns
     (final SimState (A, ...), per-interval history dict of (T, A) arrays,
-    per-agent request-grade summary incl. p50/p99 latency)."""
+    per-agent request-grade summary incl. p50/p99 latency).
+
+    ``record_ticks``: additionally emit the per-microtick counter series
+    (``history["tick_counters"]``: (T, A, K, SIM_NCOUNTERS) int32) and the
+    held interval caps (``history["caps"]``) — the raw material
+    ``repro.obs.requests`` turns into per-request stage stamps. jnp oracle
+    path only (the fused Pallas kernel advances a whole interval per call,
+    so there is no per-tick state to observe); the carried twin state is
+    bit-identical to the unrecorded run."""
+    if record_ticks and use_pallas:
+        raise ValueError("record_ticks requires the jnp oracle path "
+                         "(use_pallas=False): the fused kernel has no "
+                         "per-tick state to record")
     warn_if_ring_clamps(sp, jax.device_get(env_params.queue_cap),
                         stacklevel=2)
     state, history = _simulate(cfg, sp, params, masks, env_params,
                                jnp.asarray(traces, jnp.float32), key,
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas,
+                               record_ticks=record_ticks)
     summary = sim_metrics.summarize(state, sp)
     sim_metrics.warn_if_censored(summary, sp, stacklevel=3)
     return state, history, summary
 
 
 def eval_fleet(cfg: FCPOConfig, sp: SimParams, fleet, traces, key,
-               use_pallas: bool = False) -> Tuple[SimState, Dict, Dict]:
+               use_pallas: bool = False, record_ticks: bool = False
+               ) -> Tuple[SimState, Dict, Dict]:
     """``simulate_fleet`` for a trained fleet object: reads the stacked
     policy/mask/device-profile leaves off anything Fleet-shaped
     (``.astate.params`` / ``.masks`` / ``.env_params`` — duck-typed, so this
@@ -112,4 +135,4 @@ def eval_fleet(cfg: FCPOConfig, sp: SimParams, fleet, traces, key,
     entry the leaderboard (``repro.eval``) and the benchmarks share."""
     return simulate_fleet(cfg, sp, fleet.astate.params, fleet.masks,
                           fleet.env_params, traces, key,
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas, record_ticks=record_ticks)

@@ -63,6 +63,24 @@ def summarize(state: SimState, sp: SimParams) -> dict:
     }
 
 
+def stage_breakdown_table(decomposition: dict) -> str:
+    """Render a per-stage latency decomposition (the dict
+    ``repro.obs.requests.stage_decomposition`` returns: stage ->
+    {mean_s, p50_s, p99_s, p99_tail_mean_s}) as an aligned table — the
+    "where does the tail go" block ``launch/simulate.py --attribution``
+    prints. Takes a plain dict so this module stays free of any
+    dependency on the observability layer."""
+    lines = [f"{'stage':12s}{'mean':>10s}{'p50':>10s}{'p99':>10s}"
+             f"{'p99-tail':>10s}"]
+    for stage, row in decomposition.items():
+        lines.append(
+            f"{stage:12s}"
+            f"{row['mean_s'] * 1e3:9.1f}ms{row['p50_s'] * 1e3:9.1f}ms"
+            f"{row['p99_s'] * 1e3:9.1f}ms"
+            f"{row['p99_tail_mean_s'] * 1e3:9.1f}ms")
+    return "\n".join(lines)
+
+
 def warn_if_censored(summary: dict, sp: SimParams,
                      threshold: float = CENSORED_WARN_FRACTION,
                      stacklevel: int = 2) -> float:

@@ -43,3 +43,21 @@ def sim_interval(state: SimState, arrivals: jnp.ndarray, caps: jnp.ndarray,
     if use_pallas:
         return SimState(*kops.queue_advance(*state, arrivals, caps))
     return jax.vmap(sim_interval_ref)(state, arrivals, caps)
+
+
+def sim_interval_recorded(state: SimState, arrivals: jnp.ndarray,
+                          caps: jnp.ndarray):
+    """Single-agent jnp advance that ALSO returns the counters vector after
+    every microtick — the request-attribution tap (``repro.obs.requests``
+    reconstructs per-request stage stamps from these monotone series).
+
+    Same ``lax.scan`` of ``sim_microtick`` as ``sim_interval_ref`` with a
+    per-tick ys output added, so the carried state is bit-identical to the
+    unrecorded path (int32 counters — no float reassociation to worry
+    about). Returns (new_state, (K, SIM_NCOUNTERS) int32)."""
+    def tick(carry, n_arr):
+        out = kref.sim_microtick(*carry, n_arr, caps)
+        return out, out[1]
+
+    carry, ticks = jax.lax.scan(tick, tuple(state), arrivals)
+    return SimState(*carry), ticks

@@ -275,6 +275,26 @@ class TestGracefulDegradation:
         good = {"results": []}
         assert sanitize_envelope(good) is good
 
+    def test_sanitize_refuses_cross_backend_envelopes(self):
+        import jax
+
+        from repro.eval.leaderboard import sanitize_envelope
+        here = {"backend": jax.default_backend(),
+                "device_count": jax.device_count()}
+        # same backend + device count (what save_bench stamps): usable
+        same = {"results": [], **here}
+        assert sanitize_envelope(same) is same
+        # legacy envelope without the stamps: nothing to refuse on
+        legacy = {"results": []}
+        assert sanitize_envelope(legacy) is legacy
+        # a baseline measured on different hardware is refused with a warning
+        for key, other in (("backend", "tpu-imaginary"),
+                           ("device_count", here["device_count"] + 8)):
+            warns = []
+            bad = {"results": [], **dict(here, **{key: other})}
+            assert sanitize_envelope(bad, warn=warns.append) is None
+            assert len(warns) == 1 and key in warns[0]
+
     def test_attach_deltas_survives_garbage_envelope(self):
         rows = self._rows()
         attach_deltas(rows, {"results": [None, 17, "x", {"noname": 1}]})

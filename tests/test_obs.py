@@ -1,0 +1,387 @@
+"""Flight-recorder tests: span tracing, request attribution, live-metrics
+resilience.
+
+Four invariant families:
+
+  * tracing changes NOTHING numeric — a traced ``train_fleet_scan`` run is
+    bit-identical to the untraced one (span callbacks never feed the
+    numerics), and with no tracer the compiled program is the exact
+    pre-observability one (tests/test_golden.py pins that run; here the
+    traced twin is compared leaf-for-leaf against it transitively);
+  * the exported timeline is well-formed — Chrome trace-event schema
+    round-trips through JSON, span timestamps are monotone and properly
+    nested, sampling thins emission without recompiling;
+  * request attribution is a lossless decomposition — per-request stage
+    stamps reconstructed from the twin's monotone counters conserve the
+    twin's own aggregate counts/latency-sum/histogram EXACTLY (including a
+    hypothesis sweep over random workloads), and the per-segment delays
+    telescope to the total latency;
+  * the live-metrics tap survives kills — ``MetricsSink(resume=True)``
+    validates the meta header and appends (torn tails healed), and
+    ``launch/watch.py`` degrades gracefully on meta-only files and unknown
+    metric keys.
+"""
+import json
+import os
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core.fleet import _scan_fn, fleet_init, train_fleet_scan
+from repro.eval.stream import MetricsSink, read_metrics
+from repro.kernels.ref import (CAP_BATCH, CAP_POST, CAP_PRE, CAP_QCAP,
+                               CAP_SLO, CAP_TBATCH)
+from repro.launch import watch
+from repro.obs import Tracer, validate_chrome_trace
+from repro.obs import trace as obs_trace
+from repro.obs.requests import SEGMENTS, attribute_agent, attribute_run, \
+    conservation_report, records_to_chrome, stage_decomposition
+from repro.sim import SimParams, make_scenario, simulate_fleet
+from repro.sim.state import sim_init
+from repro.sim.step import sim_interval_recorded
+
+A, EPISODES, SEED = 4, 4, 0
+
+
+# ---------------------------------------------------------------------------
+# One traced/untraced run pair shared by the span tests (two scan compiles)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def traced_runs():
+    cfg = FCPOConfig()
+    fleet = fleet_init(cfg, A, jax.random.PRNGKey(SEED))
+    traces = make_scenario("nominal", jax.random.PRNGKey(SEED + 1), A,
+                           EPISODES * cfg.n_steps)
+    kw = dict(seed=SEED, donate=False)
+    off = train_fleet_scan(cfg, fleet, traces, **kw)
+    t1 = Tracer()
+    on = train_fleet_scan(cfg, fleet, traces, tracer=t1, **kw)
+    ev_full = t1.chrome_events()
+    t1.close()
+    size_after_first = _scan_fn(False)._cache_size()
+    t2 = Tracer(span_sample_every=2)
+    on2 = train_fleet_scan(cfg, fleet, traces, tracer=t2, **kw)
+    ev_sparse = t2.chrome_events()
+    t2.close()
+    size_after_second = _scan_fn(False)._cache_size()
+    return {"cfg": cfg, "off": off, "on": on, "on2": on2,
+            "ev_full": ev_full, "ev_sparse": ev_sparse,
+            "cache_sizes": (size_after_first, size_after_second)}
+
+
+class TestSpanTracing:
+    def test_traced_run_bit_identical(self, traced_runs):
+        """Span emission must never change the numerics — tracing ON (at
+        any sampling) computes the same bits as OFF. (OFF vs the pre-PR
+        program is pinned by tests/test_golden.py.)"""
+        for other in ("on", "on2"):
+            for a, b in zip(jax.tree.leaves(traced_runs["off"]),
+                            jax.tree.leaves(traced_runs[other])):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_tracer_swap_does_not_recompile(self, traced_runs):
+        """Trace-id and sampling period are operands, not statics: a second
+        tracer with a different sampling rate reuses the executable."""
+        first, second = traced_runs["cache_sizes"]
+        assert second == first
+
+    def test_span_names_and_counts(self, traced_runs):
+        counts = Counter(e["name"] for e in traced_runs["ev_full"]
+                         if e["ph"] == "X")
+        assert counts["episode"] == EPISODES
+        # fl_every=2 -> rounds complete on episodes 1 and 3
+        assert counts["fl_round"] == 2
+        for phase in ("fl/uplink", "fl/aggregate", "fl/finetune"):
+            assert counts[phase] == 2, counts
+        # every begin found its end: no unmatched/open anomaly markers
+        bad = [e for e in traced_runs["ev_full"]
+               if e.get("cat", "").endswith("-open")
+               or e.get("cat") == "unmatched-end"]
+        assert not bad, bad
+
+    def test_spans_monotone_and_nested(self, traced_runs):
+        ev = [e for e in traced_runs["ev_full"] if e["ph"] == "X"]
+        eps = sorted((e for e in ev if e["name"] == "episode"),
+                     key=lambda e: e["ts"])
+        # episodes are sequential, non-overlapping, non-negative duration
+        for e in eps:
+            assert e["dur"] >= 0
+        for prev, nxt in zip(eps, eps[1:]):
+            assert nxt["ts"] >= prev["ts"] + prev["dur"]
+        # every FL phase span nests inside some fl_round span
+        rounds = [e for e in ev if e["name"] == "fl_round"]
+        for e in ev:
+            if not e["name"].startswith("fl/"):
+                continue
+            assert any(r["ts"] <= e["ts"] and
+                       e["ts"] + e["dur"] <= r["ts"] + r["dur"]
+                       for r in rounds), (e, rounds)
+
+    def test_sampling_thins_emission(self, traced_runs):
+        counts = Counter(e["name"] for e in traced_runs["ev_sparse"]
+                         if e["ph"] == "X")
+        # sample_every=2 keeps episodes 0 and 2; FL rounds land on the
+        # sampled-out episodes 1 and 3, so no fl spans at all
+        assert counts["episode"] == EPISODES // 2
+        assert counts["fl_round"] == 0
+
+    def test_kernel_spans_opt_in(self):
+        """Kernel wrappers emit only under an active kernel_spans tracer,
+        and the traced call returns the same values."""
+        from repro.kernels.ops import pack
+        tok = jnp.ones((16, 8), jnp.float32)
+        idx = jnp.asarray([0, 3, -1, 5], jnp.int32)
+        base = np.asarray(pack(tok, idx)[0])
+        with Tracer(kernel_spans=True) as tr, obs_trace.activate(tr):
+            out = np.asarray(pack(tok, idx)[0])
+        ev = tr.chrome_events()
+        assert [e["name"] for e in ev if e["ph"] == "X"] == ["kernel/pack"]
+        assert np.array_equal(base, out)
+        with Tracer(kernel_spans=False) as quiet, obs_trace.activate(quiet):
+            pack(tok, idx)
+        assert quiet.chrome_events() == []
+
+
+class TestChromeTraceSchema:
+    def test_export_roundtrip(self, tmp_path):
+        tr = Tracer(pid=7)
+        with tr.span("compile", cat="host"):
+            with tr.span("lower", cat="host"):
+                pass
+        tr.instant("ckpt-written")
+        tr.add_complete("req0/infer", ts_us=10.0, dur_us=5.0, pid=1000,
+                        tid=2, args={"agent": 0})
+        path = tr.export(str(tmp_path / "trace.json"))
+        tr.close()
+        with open(path) as f:
+            trace = json.load(f)
+        assert validate_chrome_trace(trace) == []
+        ev = trace["traceEvents"]
+        assert len(ev) == 4
+        names = {e["name"] for e in ev}
+        assert names == {"compile", "lower", "ckpt-written", "req0/infer"}
+        inner = next(e for e in ev if e["name"] == "lower")
+        outer = next(e for e in ev if e["name"] == "compile")
+        assert outer["ts"] <= inner["ts"]
+        assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+
+    def test_validator_catches_malformed(self):
+        assert validate_chrome_trace([1, 2]) != []
+        assert validate_chrome_trace({"nope": []}) != []
+        assert validate_chrome_trace({"traceEvents": "x"}) != []
+        ok = {"name": "a", "ph": "X", "ts": 0.0, "dur": 1.0,
+              "pid": 1, "tid": 0}
+        assert validate_chrome_trace({"traceEvents": [ok]}) == []
+        for bad in (
+            {k: v for k, v in ok.items() if k != "pid"},   # missing key
+            dict(ok, ph="Z"),                               # unknown phase
+            dict(ok, ts=-1.0),                              # negative ts
+            {k: v for k, v in ok.items() if k != "dur"},   # X without dur
+            "not-an-object",
+        ):
+            assert validate_chrome_trace({"traceEvents": [bad]}) != []
+
+    def test_interrupted_span_drains_as_instant(self):
+        tr = Tracer()
+        tr._begin("episode", "phase")  # begin with no matching end
+        trace = tr.chrome_trace()
+        tr.close()
+        assert validate_chrome_trace(trace) == []
+        (ev,) = trace["traceEvents"]
+        assert ev["ph"] == "i" and ev["cat"].endswith("-open")
+
+
+# ---------------------------------------------------------------------------
+# Request-grade latency attribution
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def recorded_run():
+    cfg = FCPOConfig()
+    sp = SimParams()
+    a, t = 2, 8
+    fleet = fleet_init(cfg, a, jax.random.PRNGKey(SEED))
+    traces = make_scenario("steady", jax.random.PRNGKey(SEED + 2), a, t)
+    args = (cfg, sp, fleet.astate.params, fleet.masks, fleet.env_params,
+            traces, jax.random.PRNGKey(SEED + 3))
+    state_plain, _, summ_plain = simulate_fleet(*args)
+    state, history, summ = simulate_fleet(*args, record_ticks=True)
+    return {"sp": sp, "state_plain": state_plain, "state": state,
+            "history": history, "summ": summ, "summ_plain": summ_plain}
+
+
+class TestRequestAttribution:
+    def test_recording_is_bit_identical(self, recorded_run):
+        for a, b in zip(jax.tree.leaves(recorded_run["state_plain"]),
+                        jax.tree.leaves(recorded_run["state"])):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_conservation_against_twin_aggregates(self, recorded_run):
+        out = attribute_run(recorded_run["history"], recorded_run["state"])
+        for rep in out["conservation"]:
+            assert rep["ok"], rep
+
+    def test_segments_telescope_to_latency(self, recorded_run):
+        out = attribute_run(recorded_run["history"], recorded_run["state"])
+        for attr in out["agents"]:
+            done = attr["completed"]
+            total = sum(attr[s + "_ticks"][done] for s in SEGMENTS)
+            assert np.array_equal(total, attr["latency_ticks"][done])
+
+    def test_stage_decomposition_shape(self, recorded_run):
+        out = attribute_run(recorded_run["history"], recorded_run["state"])
+        dec = stage_decomposition(out["agents"], recorded_run["sp"].dt)
+        assert set(dec) == set(SEGMENTS)
+        for stats in dec.values():
+            assert set(stats) == {"mean_s", "p50_s", "p99_s",
+                                  "p99_tail_mean_s"}
+            assert all(v >= 0.0 for v in stats.values())
+
+    def test_records_export_to_valid_chrome_slices(self, recorded_run):
+        out = attribute_run(recorded_run["history"], recorded_run["state"],
+                            sample_every=4)
+        with Tracer() as tr:
+            n = records_to_chrome(tr, out["records"], recorded_run["sp"].dt)
+            trace = tr.chrome_trace()
+        assert n > 0 and validate_chrome_trace(trace) == []
+        assert sum(1 for e in trace["traceEvents"] if e["ph"] == "X") == n
+
+    def test_sampling_thins_records_not_conservation(self, recorded_run):
+        full = attribute_run(recorded_run["history"], recorded_run["state"],
+                             sample_every=1)
+        thin = attribute_run(recorded_run["history"], recorded_run["state"],
+                             sample_every=8)
+        assert 0 < len(thin["records"]) < len(full["records"])
+        for rep in thin["conservation"]:
+            assert rep["ok"]
+
+
+class TestAttributionProperty:
+    """Conservation holds on arbitrary workloads, not just policy-driven
+    ones: random arrivals and caps through the real microtick kernel."""
+
+    def _caps(self, rng):
+        caps = np.zeros(6, np.float32)
+        caps[CAP_PRE] = rng.uniform(0.2, 4.0)
+        caps[CAP_POST] = rng.uniform(0.2, 4.0)
+        caps[CAP_BATCH] = rng.integers(1, 7)
+        caps[CAP_TBATCH] = rng.integers(1, 7)
+        caps[CAP_QCAP] = rng.integers(2, 13)
+        caps[CAP_SLO] = rng.integers(1, 15)
+        return caps
+
+    def _check(self, seed, n_intervals, k_ticks=8):
+        rng = np.random.default_rng(seed)
+        sp = SimParams(dt=0.05, k_ticks=k_ticks, ring=64, hist_n=16)
+        step = jax.jit(sim_interval_recorded)
+        state = sim_init(sp)
+        seqs, caps_seq = [], []
+        for _ in range(n_intervals):
+            caps = self._caps(rng)
+            arrivals = rng.integers(0, 7, size=k_ticks)
+            state, ticks = step(state, jnp.asarray(arrivals, jnp.int32),
+                                jnp.asarray(caps))
+            seqs.append(np.asarray(ticks))
+            caps_seq.append(caps)
+        seq = np.concatenate(seqs)
+        attr = attribute_agent(seq, np.asarray(caps_seq), k_ticks)
+        rep = conservation_report(attr, seq[-1],
+                                  float(np.asarray(state.lat_sum)),
+                                  np.asarray(state.hist))
+        assert rep["ok"], (seed, rep)
+
+    def test_random_workloads_conserve(self):
+        hyp = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+
+        @hyp.settings(max_examples=20, deadline=None)
+        @hyp.given(seed=st.integers(0, 2**32 - 1),
+                   n_intervals=st.integers(1, 6))
+        def prop(seed, n_intervals):
+            self._check(seed, n_intervals)
+
+        prop()
+
+    def test_deterministic_slice(self):
+        """Hypothesis-free slice of the property (runs even without the
+        optional dependency)."""
+        for seed in (0, 1, 2, 3):
+            self._check(seed, n_intervals=4)
+
+
+# ---------------------------------------------------------------------------
+# Live-metrics resilience: sink resume + watcher degradation
+# ---------------------------------------------------------------------------
+META = {"agents": 4, "episodes": 8, "seed": 0}
+
+
+class TestSinkResume:
+    def test_resume_appends_after_kill(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        with MetricsSink(path, meta=META) as sink:
+            for e in range(3):
+                sink.append({"episode": e, "reward": 0.1 * e})
+        with MetricsSink(path, meta=META, resume=True) as sink:
+            assert sink.n_records == 3
+            for e in range(3, 5):
+                sink.append({"episode": e, "reward": 0.1 * e})
+        meta, records = read_metrics(path)
+        assert meta == META
+        assert [r["episode"] for r in records] == [0, 1, 2, 3, 4]
+
+    def test_resume_heals_torn_tail(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        with MetricsSink(path, meta=META) as sink:
+            sink.append({"episode": 0, "reward": 0.5})
+        with open(path, "a") as f:
+            f.write('{"episode": 1, "rew')  # killed mid-write, no newline
+        with MetricsSink(path, meta=META, resume=True) as sink:
+            assert sink.n_records == 1  # torn line dropped, not counted
+            sink.append({"episode": 1, "reward": 0.6})
+        _, records = read_metrics(path)
+        # the resumed record must not merge into the torn line
+        assert [r["episode"] for r in records] == [0, 1]
+
+    def test_resume_meta_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        MetricsSink(path, meta=META).close()
+        with pytest.raises(ValueError, match="meta mismatch"):
+            MetricsSink(path, meta=dict(META, agents=8), resume=True)
+
+    def test_resume_headerless_file_raises(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        with open(path, "w") as f:
+            f.write('{"episode": 0, "reward": 0.5}\n')
+        with pytest.raises(ValueError, match="header"):
+            MetricsSink(path, meta=META, resume=True)
+
+    def test_resume_missing_file_is_fresh_start(self, tmp_path):
+        path = str(tmp_path / "new.jsonl")
+        with MetricsSink(path, meta=META, resume=True) as sink:
+            assert sink.n_records == 0
+            sink.append({"episode": 0, "reward": 0.1})
+        meta, records = read_metrics(path)
+        assert meta == META and len(records) == 1
+
+
+class TestWatchDegradation:
+    def test_meta_only_file_renders_no_records_line(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        MetricsSink(path, meta=META).close()  # killed before episode 0
+        text = watch.render(path, tail_k=5)
+        assert "no records yet" in text
+        assert "run:" in text
+
+    def test_unknown_and_non_numeric_keys_skipped(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        with MetricsSink(path, meta=META) as sink:
+            sink.append({"episode": 0, "reward": 1.0,
+                         "brand_new_metric": 2.0, "note": "hello"})
+            sink.append({"episode": 1, "reward": "oops-a-string"})
+        text = watch.render(path, tail_k=5)
+        assert "reward" in text
+        assert "brand_new_metric" not in text
+        assert "note" not in text
