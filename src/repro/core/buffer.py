@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.fcpo import FCPOConfig
+from repro.core import dtypes as dtp
 from repro.kernels import ref as kref
 
 RIDGE = 0.1  # ε·I covariance regularizer (keeps D_M defined before fill-up)
@@ -74,6 +75,68 @@ def buffer_init(cfg: FCPOConfig) -> DiversityBuffer:
         p_sum=jnp.zeros((na,)),
         n_filled=jnp.zeros((), jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Storage-dtype layer (StatePolicy.buffer). The scoring engines always run in
+# float32: every public entry point unpacks the stored payload to f32, runs
+# the unchanged math, and repacks to the stored dtype — a no-op chain under
+# the default all-float32 policy, so the traced program is bit-identical.
+# int8 slots use the fixed scales from core.dtypes (quantization is
+# idempotent, so insert→insert never drifts a surviving slot); the score and
+# the streaming moments are precision-critical (argmin eviction, Cholesky)
+# and stay float32 under every policy.
+# ---------------------------------------------------------------------------
+_F32_PAYLOAD = ("logp", "rewards", "values")
+
+
+def _payload_f32(buf: DiversityBuffer) -> DiversityBuffer:
+    """Dequantize/upcast the stored payload to float32 (identity on f32)."""
+    if buf.states.dtype == jnp.int8:
+        states = dtp.dequant8(buf.states, dtp.STATE_SCALE)
+        probs = dtp.dequant8(buf.probs, dtp.PROB_SCALE)
+    else:
+        states = buf.states.astype(jnp.float32)
+        probs = buf.probs.astype(jnp.float32)
+    return buf._replace(
+        states=states, probs=probs,
+        **{k: getattr(buf, k).astype(jnp.float32) for k in _F32_PAYLOAD})
+
+
+def _payload_like(buf: DiversityBuffer, like: DiversityBuffer
+                  ) -> DiversityBuffer:
+    """Repack a float32-payload buffer to ``like``'s storage dtypes."""
+    if like.states.dtype == jnp.int8:
+        states = dtp.quant8(buf.states, dtp.STATE_SCALE)
+        probs = dtp.quant8(buf.probs, dtp.PROB_SCALE)
+    else:
+        states = buf.states.astype(like.states.dtype)
+        probs = buf.probs.astype(like.probs.dtype)
+    return buf._replace(
+        states=states, probs=probs,
+        **{k: getattr(buf, k).astype(getattr(like, k).dtype)
+           for k in _F32_PAYLOAD})
+
+
+def buffer_cast(buf: DiversityBuffer, dtype: str) -> DiversityBuffer:
+    """Cast the stored payload to a ``StatePolicy.buffer`` dtype:
+    ``float32`` | ``bfloat16`` (all five payload arrays) | ``int8``
+    (fixed-scale states/probs, bfloat16 scalars)."""
+    f32 = _payload_f32(buf)
+    if dtype == "float32":
+        return f32
+    if dtype == "bfloat16":
+        bf = jnp.bfloat16
+        return f32._replace(
+            states=f32.states.astype(bf), probs=f32.probs.astype(bf),
+            **{k: getattr(f32, k).astype(bf) for k in _F32_PAYLOAD})
+    if dtype == "int8":
+        bf = jnp.bfloat16
+        return f32._replace(
+            states=dtp.quant8(f32.states, dtp.STATE_SCALE),
+            probs=dtp.quant8(f32.probs, dtp.PROB_SCALE),
+            **{k: getattr(f32, k).astype(bf) for k in _F32_PAYLOAD})
+    raise ValueError(f"unknown buffer storage dtype {dtype!r}")
 
 
 def mahalanobis(state, states, filled):
@@ -125,6 +188,9 @@ def buffer_insert(cfg: FCPOConfig, buf: DiversityBuffer, state, action, logp,
     """Streaming-moment insert: Eq. 6 scored from the running statistics
     (O(D²), never touches the N stored slots), then empty-slot /
     min-score-evict placement identical to the recompute oracle."""
+    stored, buf = buf, _payload_f32(buf)
+    state = state.astype(jnp.float32)
+    probs = probs.astype(jnp.float32)
     (states, probs_b, score, filled, s_sum, s_outer, p_sum, n_filled), \
         (idx, do, _d) = kref.diversity_insert_step(
             buf.states, buf.probs, buf.score, buf.filled, buf.s_sum,
@@ -133,7 +199,8 @@ def buffer_insert(cfg: FCPOConfig, buf: DiversityBuffer, state, action, logp,
     buf = buf._replace(states=states, probs=probs_b, score=score,
                        filled=filled, s_sum=s_sum, s_outer=s_outer,
                        p_sum=p_sum, n_filled=n_filled)
-    return _scatter_payload(buf, idx, do, action, logp, reward, value)
+    buf = _scatter_payload(buf, idx, do, action, logp, reward, value)
+    return _payload_like(buf, stored)
 
 
 def buffer_insert_reference(cfg: FCPOConfig, buf: DiversityBuffer, state,
@@ -143,6 +210,9 @@ def buffer_insert_reference(cfg: FCPOConfig, buf: DiversityBuffer, state,
     the full covariance from the stored slots and solves it per candidate.
     Maintains the streaming moments too, so reference-built buffers stay
     valid inputs for the streaming engine."""
+    stored, buf = buf, _payload_f32(buf)
+    state = state.astype(jnp.float32)
+    probs = probs.astype(jnp.float32)
     d = diversity(cfg, buf, state, probs)
     has_empty = ~jnp.all(buf.filled)
     empty_idx = jnp.argmin(buf.filled)            # first False
@@ -170,7 +240,8 @@ def buffer_insert_reference(cfg: FCPOConfig, buf: DiversityBuffer, state,
         n_filled=(buf.n_filled + do.astype(buf.n_filled.dtype)
                   - evict.astype(buf.n_filled.dtype)),
     )
-    return _scatter_payload(buf, idx, do, action, logp, reward, value)
+    buf = _scatter_payload(buf, idx, do, action, logp, reward, value)
+    return _payload_like(buf, stored)
 
 
 def buffer_insert_batch(cfg: FCPOConfig, buf: DiversityBuffer, states,
@@ -182,6 +253,11 @@ def buffer_insert_batch(cfg: FCPOConfig, buf: DiversityBuffer, states,
     default, the fused Pallas kernel with ``use_pallas=True`` — and the
     non-scored payload is scattered afterwards by last-writer-wins on the
     decision trace, which is embarrassingly parallel."""
+    stored, buf = buf, _payload_f32(buf)
+    states = states.astype(jnp.float32)
+    probs = probs.astype(jnp.float32)
+    logp, rewards, values = (x.astype(jnp.float32)
+                             for x in (logp, rewards, values))
     t_steps, n = states.shape[0], buf.score.shape[0]
     if use_pallas:
         from repro.kernels import ops as kops
@@ -209,7 +285,7 @@ def buffer_insert_batch(cfg: FCPOConfig, buf: DiversityBuffer, states,
         keep = (last < 0).reshape((-1,) + (1,) * (old.ndim - 1))
         return jnp.where(keep, old, gathered)
 
-    return buf._replace(
+    buf = buf._replace(
         states=new_states, probs=new_probs, score=new_score,
         filled=new_filled, s_sum=s_sum, s_outer=s_outer, p_sum=p_sum,
         n_filled=n_filled,
@@ -219,6 +295,7 @@ def buffer_insert_batch(cfg: FCPOConfig, buf: DiversityBuffer, states,
         values=scatter(buf.values, values),
         count=buf.count + t_steps,
     )
+    return _payload_like(buf, stored)
 
 
 def buffer_resync(buf: DiversityBuffer) -> DiversityBuffer:
@@ -227,12 +304,13 @@ def buffer_resync(buf: DiversityBuffer) -> DiversityBuffer:
     O(N·D²) per agent, so it belongs on the FL-round cadence (``fl_round``
     calls it), never on the per-step hot path. Works on fleet-stacked
     buffers (vmapped callers see unbatched leaves)."""
-    w = buf.filled.astype(buf.s_sum.dtype)
+    f32 = _payload_f32(buf)  # moments are built from the *dequantized* slots
+    w = f32.filled.astype(f32.s_sum.dtype)
     return buf._replace(
-        s_sum=(buf.states * w[:, None]).sum(0),
-        s_outer=jnp.einsum("nd,ne->de", buf.states * w[:, None], buf.states),
-        p_sum=(buf.probs * w[:, None]).sum(0),
-        n_filled=buf.filled.sum().astype(buf.n_filled.dtype),
+        s_sum=(f32.states * w[:, None]).sum(0),
+        s_outer=jnp.einsum("nd,ne->de", f32.states * w[:, None], f32.states),
+        p_sum=(f32.probs * w[:, None]).sum(0),
+        n_filled=f32.filled.sum().astype(f32.n_filled.dtype),
     )
 
 

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.fcpo import FCPOConfig
+from repro.core import dtypes as dtp
 from repro.core import env as env_mod
 from repro.core.agent import ActionMask, sample_actions
 from repro.core.backends import FLUID, EnvBackend
@@ -59,9 +60,16 @@ def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
     def step(carry, rate):
         est, rng = carry
         rng, krng = jax.random.split(rng)
-        obs = backend.observe(cfg, ep, est, rate)
+        # Observations/rewards enter the learner in float32 even when the
+        # carried env state is stored bf16 (StatePolicy.env); the stepped
+        # state is cast back to the carry's storage dtypes so the scan
+        # carry stays dtype-stable. All identities under the f32 default.
+        obs = backend.observe(cfg, ep, est, rate).astype(jnp.float32)
         actions, logp, out = sample_actions(cfg, astate.params, obs, mask, krng)
         est2, reward, info = backend.step(cfg, ep, est, actions, rate)
+        est2 = dtp.tree_cast_like(est2, est)
+        reward = reward.astype(jnp.float32)
+        info = dtp.tree_f32(info)
         probs = jnp.concatenate([jnp.exp(out["res"]), jnp.exp(out["bs"]),
                                  jnp.exp(out["mt"])], axis=-1)
         ys = (obs, actions, logp, reward, out["value"], probs, info)
@@ -101,9 +109,14 @@ def run_episode_reference(cfg: FCPOConfig, ep: env_mod.EnvParams,
     def step(carry, rate):
         est, buf, rng = carry
         rng, krng = jax.random.split(rng)
-        obs = backend.observe(cfg, ep, est, rate)
+        # Same dtype discipline as run_episode: f32 into the learner, env
+        # carry cast back to its storage dtypes (no-ops under f32 default).
+        obs = backend.observe(cfg, ep, est, rate).astype(jnp.float32)
         actions, logp, out = sample_actions(cfg, astate.params, obs, mask, krng)
         est2, reward, info = backend.step(cfg, ep, est, actions, rate)
+        est2 = dtp.tree_cast_like(est2, est)
+        reward = reward.astype(jnp.float32)
+        info = dtp.tree_f32(info)
         probs = jnp.concatenate([jnp.exp(out["res"]), jnp.exp(out["bs"]),
                                  jnp.exp(out["mt"])], axis=-1)
         buf = buffer_insert_reference(cfg, buf, obs, actions, logp, reward,

@@ -1,0 +1,134 @@
+"""Fleet state dtype policies: memory-lean storage, full-precision math.
+
+At A=2048 the Fleet pytree is memory-bound before it is compute-bound: the
+Adam moments alone are 2x the parameter bytes, and the transport state
+(error-feedback residuals + parked async deltas) another 2x. A
+``StatePolicy`` names the *storage* dtype of each state family; all math
+stays float32 — every consumer casts up on read and back to the stored
+dtype on write (``tree_cast_like``), so the compute program is unchanged
+and only the bytes at rest (and the scan carry) shrink.
+
+The contract that keeps this safe:
+
+  * ``float32`` (the default) is the identity: ``astype`` to the same dtype
+    is a no-op in JAX, so the traced program — and therefore every
+    pre-policy run — is bit-for-bit unchanged.
+  * Both fleet drivers (``train_fleet_scan`` / ``train_fleet_reference``)
+    run the SAME dtype-preserving functions, so scan==reference
+    equivalence holds under every policy (tests/test_state_dtype.py locks
+    it per policy).
+  * int8 buffer slots use *fixed* quantization scales (no per-tensor scale
+    leaves), so the pytree structure — and the donation audit's leaf
+    count — is identical across policies. Quantization is idempotent
+    (requantizing a stored slot is the identity), so repeated
+    insert/resync passes do not drift.
+
+Policy families (what each field governs):
+  * ``opt``       — Adam first/second moments (``astate.opt["m"|"v"]``)
+  * ``env``       — float leaves of the per-agent env state
+  * ``transport`` — codec residuals + parked async deltas
+  * ``buffer``    — diversity-buffer payload; ``int8`` packs the stored
+                    states/probs slots (fixed scales below) and keeps the
+                    small payload vectors bfloat16; scores and streaming
+                    moments stay float32 (eviction precision, Cholesky)
+  * ``model``     — agent params + per-pod base networks (the aggressive
+                    end: Alg. 1 aggregation still computes in float32)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# Fixed int8 quantization scales for buffer slots. Observation coordinates
+# are non-negative and O(1) (rate/100, utilizations, normalized queue
+# depths — see core.env.observe_vector): 1/32 covers [0, 3.97] at 0.031
+# resolution. Policy probabilities live in [0, 1]: 1/127 is exact at the
+# endpoints. Fixed (not per-tensor) scales keep the pytree leaf count
+# policy-invariant.
+STATE_SCALE = 1.0 / 32.0
+PROB_SCALE = 1.0 / 127.0
+
+
+@dataclass(frozen=True)
+class StatePolicy:
+    """Storage dtypes for the Fleet state families. Hashable/frozen so it
+    can ride jit-static arguments, but nothing needs to: the policy is
+    applied by casting the state once (``fleet_cast``) and every update
+    path preserves leaf dtypes from there."""
+    name: str = "float32"
+    opt: str = "float32"
+    env: str = "float32"
+    transport: str = "float32"
+    buffer: str = "float32"      # "float32" | "bfloat16" | "int8"
+    model: str = "float32"
+
+
+POLICIES = {
+    # the default: bit-identical to every pre-policy run
+    "float32": StatePolicy(),
+    # conservative lean state: moments/env/transport/buffer in bf16,
+    # model weights untouched (~1.7x state-bytes cut)
+    "bf16": StatePolicy(name="bf16", opt="bfloat16", env="bfloat16",
+                        transport="bfloat16", buffer="bfloat16"),
+    # full lean state: bf16 everywhere + int8 buffer slots (>= 2x cut)
+    "lean": StatePolicy(name="lean", opt="bfloat16", env="bfloat16",
+                        transport="bfloat16", buffer="int8",
+                        model="bfloat16"),
+}
+
+
+def get_policy(policy) -> StatePolicy:
+    """Resolve a policy name / StatePolicy / None (-> default float32)."""
+    if policy is None:
+        return POLICIES["float32"]
+    if isinstance(policy, StatePolicy):
+        return policy
+    if policy not in POLICIES:
+        raise ValueError(f"unknown state policy {policy!r}; expected one of "
+                         f"{tuple(POLICIES)} or a StatePolicy")
+    return POLICIES[policy]
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+def cast_floats(tree, dtype):
+    """astype every floating leaf of ``tree`` to ``dtype`` (ints, bools and
+    rng keys pass through). The float32->float32 case is the identity —
+    JAX's ``convert_element_type`` to the same dtype returns its operand."""
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if _is_float(x) else x, tree)
+
+
+def tree_cast_like(tree, like):
+    """astype each leaf of ``tree`` to the matching leaf dtype of ``like``
+    — the write-back half of compute-in-f32/store-in-policy-dtype. Identity
+    (same arrays, same program) when the dtypes already match."""
+    return jax.tree.map(lambda x, l: x.astype(jnp.asarray(l).dtype),
+                        tree, like)
+
+
+def tree_f32(tree):
+    """Cast every floating leaf up to float32 (identity on float32)."""
+    return cast_floats(tree, jnp.float32)
+
+
+def quant8(x, scale):
+    """Fixed-scale symmetric int8 quantization. Idempotent composed with
+    ``dequant8``: quant(dequant(q)) == q."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def dequant8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def tree_bytes(tree) -> int:
+    """Total storage bytes of a pytree of arrays."""
+    return int(sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(tree)
+                   if hasattr(x, "dtype")))

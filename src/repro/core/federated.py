@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from repro.configs.fcpo import FCPOConfig
 from repro.core.agent import BACKBONE_KEYS, HEAD_KEYS, ActionMask
 from repro.core.ppo import Rollout, action_logp, gae
+from repro.distributed.sharding import agent_hint, pod_hint
 
 
 # ---------------------------------------------------------------------------
@@ -146,8 +147,8 @@ def _robust_masked_with_base(stacked, base, sel, pod_ids, n_pods,
          base[:, None]], axis=1)
     valid = jnp.concatenate(
         [valid, jnp.ones((n_pods, 1), bool)], axis=1)
-    agg = _robust_stat(vals, valid, method, trim_frac)
-    return agg[pod_ids], agg
+    agg = pod_hint(_robust_stat(vals, valid, method, trim_frac))
+    return agent_hint(agg[pod_ids]), agg
 
 
 def _masked_mean_with_base(stacked, base, sel, pod_ids, n_pods):
@@ -161,8 +162,12 @@ def _masked_mean_with_base(stacked, base, sel, pod_ids, n_pods):
     ssum = jax.ops.segment_sum(stacked * w.reshape((-1,) + (1,) * (stacked.ndim - 1)),
                                pod_ids, n_pods)                    # (P, ...)
     denom = (wsum + 1.0).reshape((n_pods,) + (1,) * (stacked.ndim - 1))
-    agg = (base + ssum) / denom                                    # (P, ...)
-    return agg[pod_ids], agg
+    # Sharding hints (no-ops without an ambient mesh): the segment-sum is a
+    # reduce over agent shards into the pod placement, and the gather back
+    # to agents is the redistribution — under a mesh XLA lowers this to
+    # real collectives instead of gathering a full replica per device.
+    agg = pod_hint((base + ssum) / denom)                          # (P, ...)
+    return agent_hint(agg[pod_ids]), agg
 
 
 def _head_weights(sel, losses_h, group_ids, n_groups):
@@ -254,7 +259,8 @@ def aggregate(cfg: FCPOConfig, fleet_params, base_params, sel: jnp.ndarray,
                                            n_seg)
                 denom = (cnt + 1.0).reshape((n_seg,) + (1,) * (st.ndim - 1))
                 agg = (b_seg + ssum) / denom                # (n_seg, ...)
-            per_agent = agg[seg]
+            agg = pod_hint(agg)  # pod-major segments follow the pod placement
+            per_agent = agent_hint(agg[seg])
             # groups with no contributor keep the agent's own head
             has = (cnt[seg] > 0).reshape(wshape)
             per_agent = jnp.where(has, per_agent, st)
@@ -278,19 +284,28 @@ def merge_pods(base_params, active=None):
     ``active`` ((P,) bool, optional) models network partitions: only active
     pods contribute to and receive the cloud average; a partitioned pod
     keeps its own base network until it rejoins. ``active=None`` is the
-    original all-pods merge (identical program)."""
+    original all-pods merge (identical program).
+
+    The cross-pod mean runs in float32 even when the base networks are
+    stored bf16 (StatePolicy.model), and the pod-sharding hints let XLA
+    express the merge as an all-reduce over the pod placement instead of a
+    full-replica broadcast — both no-ops under the default f32/no-mesh
+    config."""
     if active is None:
         def mix(b):
-            return jnp.broadcast_to(b.mean(0, keepdims=True), b.shape)
+            m = pod_hint(b).astype(jnp.float32).mean(0, keepdims=True)
+            return pod_hint(jnp.broadcast_to(m, b.shape).astype(b.dtype))
         return jax.tree.map(mix, base_params)
 
     n_act = jnp.maximum(jnp.sum(active), 1)
 
     def mix(b):
+        b32 = pod_hint(b).astype(jnp.float32)
         w = active.reshape((-1,) + (1,) * (b.ndim - 1))
-        m = jnp.sum(jnp.where(w, b, 0.0), axis=0, keepdims=True) \
-            / n_act.astype(b.dtype)
-        return jnp.where(w, jnp.broadcast_to(m, b.shape), b)
+        m = jnp.sum(jnp.where(w, b32, 0.0), axis=0, keepdims=True) \
+            / n_act.astype(jnp.float32)
+        out = jnp.where(w, jnp.broadcast_to(m, b32.shape), b32)
+        return pod_hint(out.astype(b.dtype))
 
     return jax.tree.map(mix, base_params)
 

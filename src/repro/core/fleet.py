@@ -31,12 +31,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.fcpo import FCPOConfig
+from repro.core import dtypes as dtp
 from repro.core import env as env_mod
 from repro.core import federated as fed
 from repro.core.agent import ActionMask, agent_init, full_mask
 from repro.core.backends import FLUID, EnvBackend, get_backend
-from repro.core.buffer import (buffer_diversity_mean, buffer_init,
-                               buffer_resync)
+from repro.core.buffer import (buffer_cast, buffer_diversity_mean,
+                               buffer_init, buffer_resync)
 from repro.core.crl import AgentState, crl_episode
 from repro.core.ppo import agent_opt_init, finetune_heads
 from repro.distributed import sharding as shd
@@ -134,16 +135,82 @@ def fleet_shardings(fleet: Fleet, mesh) -> Fleet:
     return Fleet(**vals, n_pods=fleet.n_pods, group_counts=fleet.group_counts)
 
 
+def fleet_cast(fleet: Fleet, state_policy) -> Fleet:
+    """Cast the fleet's state families to a ``repro.core.dtypes.StatePolicy``
+    (name / instance / None -> float32). Storage-only: every training path
+    computes in float32 and writes back at the stored leaf dtype, so the
+    policy is fully encoded in the leaves — no static flags, no retrace keys
+    beyond the dtype change itself. Casting to ``"float32"`` recovers a
+    full-precision fleet from a lean one (int8 buffer slots dequantize)."""
+    pol = dtp.get_policy(state_policy)
+    astate = fleet.astate
+    opt = dict(fleet.astate.opt)
+    opt["m"] = dtp.cast_floats(opt["m"], pol.opt)
+    opt["v"] = dtp.cast_floats(opt["v"], pol.opt)
+    astate = astate._replace(
+        params=dtp.cast_floats(astate.params, pol.model),
+        opt=opt,
+        buffer=buffer_cast(astate.buffer, pol.buffer),
+        env_state=dtp.cast_floats(astate.env_state, pol.env),
+    )
+    return fleet._replace(
+        astate=astate,
+        base_params=dtp.cast_floats(fleet.base_params, pol.model),
+        env_params=dtp.cast_floats(fleet.env_params, pol.env),
+        residuals=dtp.cast_floats(fleet.residuals, pol.transport),
+        pending=fleet.pending._replace(
+            delta=dtp.cast_floats(fleet.pending.delta, pol.transport)),
+    )
+
+
+def fleet_state_bytes(fleet: Fleet) -> Dict[str, float]:
+    """Storage bytes of the fleet pytree by state family (plus ``total`` and
+    ``per_agent``) — the quantity the lean policies shrink and the scaling
+    benchmark curves. Pure host-side accounting from shapes/dtypes."""
+    a = int(fleet.pod_ids.shape[0])
+    fam = {
+        "model": (fleet.astate.params, fleet.base_params),
+        "opt": fleet.astate.opt,
+        "buffer": fleet.astate.buffer,
+        "env": (fleet.astate.env_state, fleet.env_params),
+        "transport": (fleet.residuals, fleet.pending),
+        "misc": (fleet.masks, fleet.group_ids,
+                 fleet.pod_ids, fleet.bandwidth, fleet.speeds,
+                 fleet.astate.rng, fleet.crash_timer, fleet.partition_timer),
+    }
+    out = {k: float(dtp.tree_bytes(v)) for k, v in fam.items()}
+    out["total"] = float(sum(out.values()))
+    out["per_agent"] = out["total"] / max(a, 1)
+    return out
+
+
+def fleet_device_bytes(fleet: Fleet) -> Dict[int, float]:
+    """Actual per-device placement of the fleet pytree: ``{device_id:
+    bytes}`` summed over every leaf's addressable shards. On a fleet mesh
+    the agent-sharded leaves split across the ``data`` axis, so a balanced
+    placement shows near-equal rows — the quantity the watcher's scaling
+    rows stream."""
+    per: Dict[int, float] = {}
+    for leaf in jax.tree.leaves(fleet):
+        for sh in getattr(leaf, "addressable_shards", ()):
+            d = int(sh.device.id)
+            per[d] = per.get(d, 0.0) + float(sh.data.nbytes)
+    return per
+
+
 def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
                masks: Optional[ActionMask] = None,
                speeds: Optional[jnp.ndarray] = None,
                bandwidth: Optional[jnp.ndarray] = None,
                slo_s: Optional[float] = None, mesh=None,
-               env_backend=None) -> Fleet:
+               env_backend=None, state_policy=None) -> Fleet:
     """``env_backend``: ``"fluid"`` (default) / ``"twin"`` / an
     ``EnvBackend`` — the per-agent ``astate.env_state`` leaves are that
     backend's state pytree, so pass the SAME backend to the training
-    drivers."""
+    drivers. ``state_policy``: a ``repro.core.dtypes`` policy name /
+    ``StatePolicy`` — storage dtypes for the fleet state families
+    (``fleet_cast``); the default (None) keeps the all-float32 layout,
+    bit-identical to pre-policy fleets."""
     backend = get_backend(env_backend)
     kp, kb, ke, kr = jax.random.split(key, 4)
     agent_keys = jax.random.split(kp, n_agents)
@@ -185,6 +252,8 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
                   jnp.zeros((n_agents,), jnp.int32),
                   jnp.zeros((n_pods,), jnp.int32),
                   n_pods=n_pods, group_counts=group_counts)
+    if state_policy is not None:
+        fleet = fleet_cast(fleet, state_policy)
     if mesh is not None:
         fleet = jax.device_put(fleet, fleet_shardings(fleet, mesh))
     return fleet
@@ -328,8 +397,17 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
         if trace:
             tok = obs_trace.span_begin("fl/encode", trace_id, params, tok,
                                        when=trace_when)
-        base_g = jax.tree.map(lambda b: b[fleet.pod_ids], fleet.base_params)
-        delta = jax.tree.map(jnp.subtract, params, base_g)
+        # The (P,...)->(A,...) gather is the round's downlink broadcast: the
+        # agent hint lets a meshed run materialize it shard-local instead of
+        # full-replica. Deltas are formed in float32 whatever the storage
+        # policy (bf16 params would otherwise difference at bf16). Both are
+        # no-ops under the default f32/no-mesh config.
+        base_g = jax.tree.map(
+            lambda b: shd.agent_hint(b[fleet.pod_ids].astype(jnp.float32)),
+            fleet.base_params)
+        delta = jax.tree.map(
+            lambda p, b: jnp.subtract(p.astype(jnp.float32), b),
+            params, base_g)
         # bind the trace-id operand so a Pallas codec kernel called in here
         # (transport.use_pallas) emits its kernel span against the same
         # tracer — binding None (trace off) is a no-op
@@ -377,14 +455,17 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
         # whose error feedback was never committed.
         recon = jax.tree.map(
             lambda rc, p: jnp.where(
-                sel_agg.reshape((-1,) + (1,) * (rc.ndim - 1)), rc, p),
+                sel_agg.reshape((-1,) + (1,) * (rc.ndim - 1)), rc,
+                p.astype(rc.dtype)),
             jax.tree.map(jnp.add, base_g, contrib), params)
         # error feedback commits only for deltas that actually went (or
         # will go, parked) over the wire; everyone else re-derives a fresh
-        # delta against the moved base next round.
+        # delta against the moved base next round. The codec returns f32
+        # residuals; they are stored back at StatePolicy.transport precision.
         residuals = jax.tree.map(
             lambda nr, r: jnp.where(
-                transmitted.reshape((-1,) + (1,) * (nr.ndim - 1)), nr, r),
+                transmitted.reshape((-1,) + (1,) * (nr.ndim - 1)),
+                nr.astype(r.dtype), r),
             res_next, fleet.residuals)
         if trace:
             tok = obs_trace.span_end("fl/encode", trace_id, tok, recon,
@@ -393,10 +474,15 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
     if trace:
         tok = obs_trace.span_begin("fl/aggregate", trace_id, recon, tok,
                                    when=trace_when)
+    # Algorithm 1 computes in float32 (recon may arrive bf16 off the plain
+    # path under a lean model policy); the new fleet/base params are stored
+    # back at the policy dtype — all astype identities under the default.
     new_params, new_base = fed.aggregate(
-        cfg, recon, fleet.base_params, sel_agg, head_losses,
-        fleet.head_groups, fleet.pod_ids, fleet.n_pods,
+        cfg, dtp.tree_f32(recon), dtp.tree_f32(fleet.base_params), sel_agg,
+        head_losses, fleet.head_groups, fleet.pod_ids, fleet.n_pods,
         method=guards.agg, trim_frac=guards.trim_frac)
+    new_params = dtp.tree_cast_like(new_params, params)
+    new_base = dtp.tree_cast_like(new_base, fleet.base_params)
     if trace:
         tok = obs_trace.span_end("fl/aggregate", trace_id, tok, new_params,
                                  when=trace_when)
@@ -619,9 +705,12 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
     fault plan (``resilience.draw_fault_plan``), also scan xs — dead code
     when ``faults`` (static) is None. ``rounds0`` seeds the FL-round
     counter so a resumed chunk keeps the hierarchical-merge cadence.
-    ``stream`` (static) taps every episode's metrics out to the registered
-    sink ``sink_id`` via an ordered host callback — the run is still ONE
-    dispatch, but the sink's JSONL file tails live. ``trace`` (static) +
+    ``stream`` (static: False / "ordered" / "unordered") taps every
+    episode's metrics out to the registered sink ``sink_id`` via a host
+    callback — the run is still ONE dispatch, but the sink's JSONL file
+    tails live. Meshed runs use the unordered flavor (ordered effects are
+    single-device-only); the scan's sequential data dependence still
+    fires it once per episode. ``trace`` (static) +
     ``trace_id``/``trace_sample`` (operands) bracket the episode / FL-round
     / pod-merge phases with flight-recorder spans on every
     ``trace_sample``-th episode — same one-dispatch run, and the trace-off
@@ -709,7 +798,7 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
             names = tuple(sorted(ep_metrics))
             jax.debug.callback(partial(_sink_emit, names), sink_id, ep_i,
                                tuple(ep_metrics[k] for k in names),
-                               ordered=True)
+                               ordered=(stream == "ordered"))
         return (flt, rounds), ep_metrics
 
     (fleet, _), history = jax.lax.scan(
@@ -801,7 +890,11 @@ def lower_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                            transport, faults, guards, episode_offset,
                            total_episodes, sink_id=0, stream=False,
                            tracer=None)
-    return _scan_fn(bool(donate)).lower(*args)
+    # trace under the mesh's resource env so the in-graph sharding hints
+    # (sharding.ambient_mesh) resolve — the analyzed program is the meshed
+    # program train_fleet_scan would run
+    with (mesh if mesh is not None else nullcontext()):
+        return _scan_fn(bool(donate)).lower(*args)
 
 
 def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
@@ -822,7 +915,12 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     ONE jitted ``lax.scan``; O(1) host dispatches per run.
 
     ``mesh``: install fleet shardings (agents over data, pods over the FL
-    hierarchy) on inputs before the call — the scan then runs SPMD.
+    hierarchy) on inputs before the call AND enter the mesh for the
+    dispatch, so the in-graph hints turn the Alg. 1 segment-sums, the
+    base-network downlink gather, and the pod merge into real collectives
+    over the mesh — the scan then runs SPMD (``launch.mesh.make_fleet_mesh``
+    builds the (pod, data) mesh; tests/test_mesh.py locks meshed == single-
+    device seed-for-seed).
     ``donate``: donate the input fleet's buffers to the compiled call
     (defaults to on except on CPU, where XLA cannot donate).
     ``env_backend``: ``"fluid"`` / ``"twin"`` / an ``EnvBackend`` — with the
@@ -865,7 +963,11 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     fetched in a single device->host transfer."""
     if donate is None:
         donate = jax.default_backend() != "cpu"
-    stream = metrics_sink is not None
+    # ordered callbacks are a single-device-only effect in XLA; on a multi-
+    # device mesh the tap switches to an unordered callback, which the scan's
+    # sequential data dependence still fires once per episode, in order
+    stream = False if metrics_sink is None else \
+        ("ordered" if mesh is None or mesh.size == 1 else "unordered")
     sid = _register_sink(metrics_sink) if stream else 0
     args = _prep_scan_args(cfg, fleet, traces, learn, federated,
                            straggler_prob, seed, mesh, env_backend,
@@ -873,7 +975,13 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                            total_episodes, sink_id=sid, stream=stream,
                            tracer=tracer)
     try:
-        with obs_trace.activate(tracer):
+        # entering the mesh's resource env activates the in-graph sharding
+        # hints (agents over (pod, data), pods over the FL hierarchy): the
+        # Alg. 1 segment-sums and the pod merge lower to real collectives.
+        # Without a mesh the hints are no-ops and the traced program is the
+        # exact single-device one.
+        with obs_trace.activate(tracer), \
+                (mesh if mesh is not None else nullcontext()):
             fleet, history = _scan_fn(bool(donate))(*args)
             history = jax.device_get(history)
     finally:

@@ -101,13 +101,19 @@ def _adam(cfg: FCPOConfig, params, grads, opt, lr_scale=1.0, freeze=None):
     b1, b2, eps = 0.9, 0.999, 1e-8
 
     def upd(path_frozen, p, g, m, v):
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mh = m / (1 - b1 ** t)
-        vh = v / (1 - b2 ** t)
+        # Moment math runs in float32 regardless of the storage dtype
+        # (StatePolicy may hold m/v — and the params/grads — in bf16);
+        # results are cast back to each leaf's own dtype, which is the
+        # identity under the default all-float32 policy.
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mh = m32 / (1 - b1 ** t)
+        vh = v32 / (1 - b2 ** t)
         step = cfg.lr * lr_scale * mh / (jnp.sqrt(vh) + eps)
-        new_p = jnp.where(path_frozen, p, p - step)
-        return new_p, m, v
+        p32 = p.astype(jnp.float32)
+        new_p = jnp.where(path_frozen, p32, p32 - step).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
 
     frozen_tree = (freeze if freeze is not None
                    else jax.tree.map(lambda _: False, params))

@@ -293,6 +293,21 @@ def shard_hint(x, *dim_prefs, priority=None):
     return jax.lax.with_sharding_constraint(x, spec)
 
 
+def agent_hint(x):
+    """Constrain an agent-stacked intermediate (A, ...) to the fleet's agent
+    placement inside jit. With these hints on both sides of the Alg. 1
+    segment-sums, XLA's SPMD partitioner lowers the pod aggregation to a
+    reduce-scatter + gather over the mesh instead of a full-replica
+    reshape. No-op without an ambient mesh."""
+    return shard_hint(x, list(AGENT))
+
+
+def pod_hint(x):
+    """Constrain a per-pod intermediate (P, ...) to the FL-hierarchy
+    placement inside jit (see ``agent_hint``). No-op without a mesh."""
+    return shard_hint(x, list(POD))
+
+
 def logits_shardings(mesh: Mesh):
     return NamedSharding(mesh, greedy_spec(
         (1 << 30, 1, 1 << 30), [list(BATCH), [], ["model"]], mesh))

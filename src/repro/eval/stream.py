@@ -149,6 +149,24 @@ def tail_summary(records: List[Dict[str, Any]], k: int = 10
     return out
 
 
+def device_summary(records: List[Dict[str, Any]]
+                   ) -> Optional[Dict[str, float]]:
+    """Scaling digest from the trailing device records the launcher appends
+    (``train_fleet.py --metrics-out`` with a mesh): mesh size, per-agent
+    step time, stored-state bytes per agent, and one ``dev<i>_bytes`` row
+    per device showing where the fleet pytree actually landed. Same JSONL
+    protocol as every other record — a device record is just an episode-less
+    line carrying a ``devices`` key. None when the run wrote none (yet)."""
+    rows = [r for r in records if "devices" in r]
+    if not rows:
+        return None
+    last = rows[-1]
+    num = lambda v: isinstance(v, (int, float)) and not isinstance(v, bool)
+    out = {k: float(v) for k, v in last.items() if num(v)}
+    out["rows"] = float(len(rows))
+    return out
+
+
 def fl_round_summary(records: List[Dict[str, Any]]) -> Optional[Dict[str, float]]:
     """FL transport digest over the episodes that actually held a round
     (``fl_payload_bytes > 0``); None when the run had no rounds (yet)."""

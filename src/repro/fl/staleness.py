@@ -96,8 +96,11 @@ def update_pending(pending: PendingDeltas, decoded, parked, consumed,
     selection keeps (and ages) its pending delta."""
     kept = pending.has & ~consumed & ~fresh_sent
     return PendingDeltas(
+        # decoded deltas come out of the codec in float32; parked copies are
+        # stored at StatePolicy.transport precision (astype is the identity
+        # under the f32 default)
         delta=jax.tree.map(
-            lambda d, p: jnp.where(_bmask(parked, d), d, p),
+            lambda d, p: jnp.where(_bmask(parked, p), d.astype(p.dtype), p),
             decoded, pending.delta),
         staleness=jnp.where(parked, 1,
                             jnp.where(kept, pending.staleness + 1, 0)

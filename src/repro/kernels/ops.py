@@ -1,9 +1,10 @@
 """jit'd public wrappers for the Pallas kernels.
 
-On this CPU container the kernels execute with ``interpret=True`` (Pallas
-interpreter — same kernel body, Python/XLA-CPU execution); on TPU the same
-call sites compile to Mosaic. ``REPRO_PALLAS_INTERPRET=0`` flips to compiled
-mode. The model code defaults to the jnp reference path under dry-run
+Dispatch is backend-aware: on CPU the kernels execute with
+``interpret=True`` (Pallas interpreter — same kernel body, Python/XLA-CPU
+execution); on any accelerator backend the same call sites compile (TPU ->
+Mosaic, GPU -> Triton). ``REPRO_PALLAS_INTERPRET=1/0`` force-overrides in
+either direction. The model code defaults to the jnp reference path under dry-run
 (identical math — see DESIGN.md §6) and switches to these via
 ``use_pallas=True``.
 
@@ -35,10 +36,15 @@ from repro.obs import trace as obs_trace
 
 
 def _interpret_default() -> bool:
+    """Backend-aware kernel dispatch: interpret on CPU (no Pallas lowering
+    there), compiled Pallas on every accelerator backend (TPU -> Mosaic,
+    GPU -> Triton). ``REPRO_PALLAS_INTERPRET=1/0`` force-overrides either
+    way (e.g. interpret-on-TPU for kernel debugging, or compiled-on-CPU to
+    reproduce a lowering error report)."""
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:
         return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+    return jax.default_backend() == "cpu"
 
 
 def _twins(name, impl, static_argnames=()):

@@ -21,5 +21,18 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_fleet_mesh(n_devices: int = None, n_pods: int = 1):
+    """The fleet-training (pod, data) mesh over ``n_devices`` (default: all
+    visible — e.g. 8 under ``XLA_FLAGS=--xla_force_host_platform_device_count
+    =8``). The ``pod`` axis mirrors the FL hierarchy: it takes ``n_pods``
+    devices when that divides the device count (per-pod base networks then
+    live one-pod-per-shard and the cloud merge is a cross-pod all-reduce);
+    otherwise pods replicate and agents shard over ``data`` alone —
+    ``greedy_spec`` falls through safely either way."""
+    n = jax.device_count() if n_devices is None else n_devices
+    pod = n_pods if n_pods > 0 and n % n_pods == 0 else 1
+    return jax.make_mesh((pod, n // pod), ("pod", "data"))
+
+
 def mesh_axis_size(mesh, name: str) -> int:
     return mesh.shape.get(name, 1)

@@ -20,6 +20,9 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --episodes 100 \
       --fl-codec int8 --fl-deadline-s 0.02 --fl-async  # compressed async FL
   PYTHONPATH=src python -m repro.launch.train_fleet --agents 8 --mesh debug
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.train_fleet --agents 64 --pods 2 \
+      --mesh fleet --state-dtype lean   # SPMD fleet mesh + lean state
 
 ``--fl-codec/--fl-deadline-s/--fl-async`` configure the federated transport
 subsystem (``repro.fl``): compressed ``params - base`` deltas with error
@@ -50,11 +53,14 @@ import numpy as np
 
 from repro.configs.fcpo import FCPOConfig
 from repro.core.backends import BACKENDS, get_backend
-from repro.core.fleet import (fleet_init, train_fleet_reference,
+from repro.core.fleet import (fleet_device_bytes, fleet_init,
+                              fleet_state_bytes, train_fleet_reference,
                               train_fleet_scan)
 from repro.eval.stream import MetricsSink
 from repro.fl import CODECS, TransportConfig
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.core.dtypes import POLICIES
+from repro.launch.mesh import (make_debug_mesh, make_fleet_mesh,
+                               make_production_mesh)
 from repro.resilience import BYZANTINE_MODES, FaultConfig, GuardConfig
 from repro.resilience.guards import AGG_METHODS
 from repro.sim import SCENARIOS, SimParams, make_scenario
@@ -96,8 +102,21 @@ def main(argv=None):
     ap.add_argument("--no-federated", action="store_true")
     ap.add_argument("--no-learn", action="store_true")
     ap.add_argument("--driver", choices=("scan", "reference"), default="scan")
-    ap.add_argument("--mesh", choices=("none", "debug", "production"),
-                    default="none")
+    ap.add_argument("--mesh", choices=("none", "debug", "production",
+                                       "fleet"),
+                    default="none",
+                    help="fleet = the scaling mesh: ('pod', 'data') over "
+                         "every visible device, pods over the FL-hierarchy "
+                         "axis (simulate multi-device on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--state-dtype", choices=tuple(POLICIES), dest="state_dtype",
+                    default="float32",
+                    help="per-agent stored-state precision policy "
+                         "(repro.core.dtypes): float32 is the bit-identical "
+                         "legacy layout; bf16 halves optimizer/env/transport "
+                         "state; lean adds int8 replay payloads + bf16 "
+                         "params for ~2x peak-memory at A=2048. All math "
+                         "still runs in float32")
     ap.add_argument("--env-backend", choices=BACKENDS, default="fluid",
                     help="environment the CRL episodes run in: the fluid "
                          "MDP or the request-level digital twin")
@@ -260,15 +279,22 @@ def main(argv=None):
         mesh = make_debug_mesh(jax.device_count(), 1)
     elif args.mesh == "production":
         mesh = make_production_mesh(multi_pod=args.pods > 1)
+    elif args.mesh == "fleet":
+        mesh = make_fleet_mesh(jax.device_count(), args.pods)
 
     fleet = fleet_init(cfg, args.agents, jax.random.PRNGKey(args.seed),
-                       n_pods=args.pods, mesh=mesh, env_backend=backend)
+                       n_pods=args.pods, mesh=mesh, env_backend=backend,
+                       state_policy=(args.state_dtype
+                                     if args.state_dtype != "float32"
+                                     else None))
     traces = make_scenario(args.scenario, jax.random.PRNGKey(args.seed + 1),
                            args.agents, args.episodes * cfg.n_steps)
     print(f"fleet: {args.agents} iAgents, {args.pods} pods, "
           f"{args.episodes} episodes, driver={args.driver}, "
           f"env={backend.name}, scenario={args.scenario}, "
-          f"mesh={args.mesh}, backend={jax.default_backend()}")
+          f"mesh={args.mesh}, state_dtype={args.state_dtype}, "
+          f"backend={jax.default_backend()} "
+          f"({jax.device_count()} devices)")
 
     kw = dict(learn=not args.no_learn, federated=not args.no_federated,
               straggler_prob=args.straggler_prob, seed=args.seed,
@@ -343,6 +369,22 @@ def main(argv=None):
                                            **kw)
         else:
             fleet, hist = train_fleet_reference(cfg, fleet, traces, **kw)
+        wall = time.time() - t0
+        if sink is not None:
+            # one trailing scaling record (same sink, same JSONL protocol):
+            # wall-clock step time + where the fleet state actually landed,
+            # device by device — launch/watch.py renders it as the scaling row
+            n_rec = len(np.asarray(hist["reward"]))
+            row = {"devices": float(mesh.size if mesh is not None else 1),
+                   "agents": float(args.agents),
+                   "step_time_s": wall / max(n_rec, 1),
+                   "step_time_per_agent_s":
+                       wall / max(n_rec, 1) / max(args.agents, 1),
+                   "state_bytes_per_agent":
+                       fleet_state_bytes(fleet)["per_agent"]}
+            for d, b in sorted(fleet_device_bytes(fleet).items()):
+                row[f"dev{d}_bytes"] = b
+            sink.append(row)
     finally:
         if sink is not None:
             sink.close()
@@ -352,7 +394,6 @@ def main(argv=None):
                   f"{len(tracer.chrome_events())} span events -> "
                   f"{args.trace_out} (open in Perfetto)")
             tracer.close()
-    wall = time.time() - t0
 
     n_run = len(np.asarray(hist["reward"]))
     k = max(n_run // 10, 1)

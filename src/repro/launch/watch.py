@@ -18,7 +18,8 @@ import os
 import sys
 import time
 
-from repro.eval.stream import fl_round_summary, read_metrics, tail_summary
+from repro.eval.stream import (device_summary, fl_round_summary,
+                               read_metrics, tail_summary)
 
 WATCH_METRICS = ("reward", "throughput", "effective_throughput", "latency",
                  "loss", "gated", "fl_payload_bytes", "fl_missed",
@@ -42,7 +43,8 @@ def render(path: str, tail_k: int, metrics=WATCH_METRICS) -> str:
         lines.append("no records yet (run warming up, or killed before "
                      "episode 0) — retry with --follow")
         return "\n".join(lines)
-    lines.append(f"episodes recorded: {len(records)}")
+    n_eps = sum(1 for r in records if "devices" not in r)
+    lines.append(f"episodes recorded: {n_eps}")
     summary = tail_summary(records, k=tail_k)
     shown = [m for m in metrics if m in summary]
     if shown:
@@ -61,6 +63,21 @@ def render(path: str, tail_k: int, metrics=WATCH_METRICS) -> str:
                      f"stale joins {fl['stale_used']:.2f}/round, "
                      f"rejected {fl.get('rejected', 0.0):.2f}/round, "
                      f"clipped {fl.get('clipped', 0.0):.2f}/round")
+    dev = device_summary(records)
+    if dev is not None:
+        lines.append(
+            f"scaling: {dev.get('devices', 1):.0f} devices, "
+            f"{dev.get('agents', 0):.0f} agents, "
+            f"step {dev.get('step_time_s', 0.0) * 1e3:.1f} ms "
+            f"({dev.get('step_time_per_agent_s', 0.0) * 1e6:.1f} us/agent), "
+            f"state {dev.get('state_bytes_per_agent', 0.0) / 1024:.1f} "
+            f"KB/agent")
+        per_dev = [(k, v) for k, v in sorted(dev.items())
+                   if k.startswith("dev") and k.endswith("_bytes")]
+        if per_dev:
+            lines.append("per-device state: " + "  ".join(
+                f"{k[:-len('_bytes')]}={v / 1024:.0f}KB"
+                for k, v in per_dev))
     return "\n".join(lines)
 
 

@@ -95,6 +95,44 @@ def profile_fleet_scan(cfg, fleet, traces, donate: bool = True,
     return stats
 
 
+def fleet_memory_report(cfg, n_agents: int, *, n_pods: int = 8,
+                        n_episodes: int = 2, state_policies=("float32",
+                                                             "lean"),
+                        donate: bool = True, seed: int = 0,
+                        **lower_kw) -> Dict[str, Dict[str, float]]:
+    """Peak-memory accounting of the fleet scan at scale, per state policy.
+
+    For each policy: build an ``n_agents`` fleet (``fleet_init(...,
+    state_policy=...)``), lower the exact donated scan, and report XLA's
+    ``peak_bytes`` alongside the stored-state byte breakdown
+    (``fleet_state_bytes``) and the donation audit — the A=2048-shape
+    audit the scaling work gates on. Keys are policy names; each row holds
+    ``peak_bytes`` / ``peak_bytes_per_agent`` / ``state_*`` bytes /
+    ``donation_ok``. ``lower_kw`` forwards to ``lower_fleet_scan``
+    (e.g. ``mesh=...``)."""
+    from repro.core.dtypes import get_policy
+    from repro.core.fleet import fleet_init, fleet_state_bytes
+
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    traces = jnp.asarray(
+        rng.uniform(10.0, 50.0, (n_agents, n_episodes * cfg.n_steps)),
+        jnp.float32)
+    out: Dict[str, Dict[str, float]] = {}
+    for pol in state_policies:
+        name = get_policy(pol).name
+        fleet = fleet_init(cfg, n_agents, key, n_pods=n_pods,
+                           state_policy=pol)
+        stats = profile_fleet_scan(cfg, fleet, traces, donate=donate,
+                                   **lower_kw)
+        sb = fleet_state_bytes(fleet)
+        row = {f"state_{k}": v for k, v in sb.items()}
+        row.update(stats)
+        row["peak_bytes_per_agent"] = stats["peak_bytes"] / n_agents
+        out[name] = row
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Canonical kernel workloads: one representative shape per Pallas kernel,
 # matching the sizes the fleet actually runs (tests/test_kernels.py cases).

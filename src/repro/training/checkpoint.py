@@ -40,6 +40,11 @@ def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None
         "step": step,
         "arrays": os.path.basename(arrays_path),
         "keys": sorted(flat),
+        # np.savez stores non-native dtypes (bf16 lean-state leaves) as raw
+        # void bytes; the true dtypes ride the manifest so restore can view
+        # them back even into a different target dtype (elastic restore
+        # across state policies)
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
         "extra": extra or {},
     }
     mtmp = arrays_path + ".manifest.tmp"
@@ -160,6 +165,22 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
         if arr.shape != tuple(leaf.shape):
             raise ValueError(f"checkpoint/model shape mismatch at {key}: "
                              f"{arr.shape} vs {leaf.shape}")
-        arr = arr.astype(leaf.dtype)
+        want = np.dtype(leaf.dtype)
+        if arr.dtype.kind == "V":
+            # np.savez round-trips non-numpy-native dtypes (ml_dtypes
+            # bfloat16 from a lean-state fleet) as raw void bytes; a view
+            # under the true dtype (manifest "dtypes", falling back to the
+            # target dtype for same-width pre-manifest saves) recovers the
+            # values exactly, where astype would fail
+            saved = manifest.get("dtypes", {}).get(key)
+            true_dt = (np.dtype(jax.numpy.dtype(saved)) if saved
+                       else want if arr.dtype.itemsize == want.itemsize
+                       else None)
+            if true_dt is None:
+                raise ValueError(
+                    f"cannot decode void-dtype leaf {key} ({arr.dtype}) "
+                    f"into {want}: checkpoint predates dtype manifests")
+            arr = arr.view(true_dt)
+        arr = arr.astype(want)
         out.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, out), manifest

@@ -2,8 +2,11 @@ import os
 
 # Smoke tests and benches must see the single real CPU device (the 512-device
 # override is ONLY for launch/dryrun.py, per the multi-pod dry-run contract).
-assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
-    "dry-run device-count override must not leak into tests"
+# Exception: the mesh suite (tests/test_mesh.py) opts in explicitly with
+# REPRO_MULTIDEVICE=1 + an 8-device override, as the CI `mesh` job does.
+if os.environ.get("REPRO_MULTIDEVICE") != "1":
+    assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+        "dry-run device-count override must not leak into tests (set REPRO_MULTIDEVICE=1 to opt in)"
 
 import jax  # noqa: E402
 import pytest  # noqa: E402

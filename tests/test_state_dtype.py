@@ -1,0 +1,199 @@
+"""State dtype policies (``repro.core.dtypes``): storage-only precision.
+
+The contract: a policy changes where the fleet's state LIVES (bf16
+optimizer/env/transport leaves, int8 replay payloads, bf16 params), never
+what the training math computes — every hot path upcasts to float32, steps,
+and writes back at the stored dtype. So scan==reference must hold under
+every policy, the default (None / "float32") must trace the exact pre-policy
+program bit-for-bit, and the lean policy must halve stored bytes per agent
+at scale.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core import dtypes as dtp
+from repro.core.fleet import (fleet_cast, fleet_init, fleet_state_bytes,
+                              train_fleet_reference, train_fleet_scan)
+from repro.data.workload import fleet_traces
+from repro.training import checkpoint as ckpt_mod
+
+CFG = FCPOConfig()
+KEY = jax.random.PRNGKey(0)
+POLICY_NAMES = tuple(dtp.POLICIES)
+
+
+class TestPolicyTable:
+    def test_default_policy_is_all_float32(self):
+        pol = dtp.get_policy(None)
+        assert pol.name == "float32"
+        assert {pol.opt, pol.env, pol.transport, pol.buffer,
+                pol.model} == {"float32"}
+
+    def test_lean_policy_families(self):
+        pol = dtp.get_policy("lean")
+        assert pol.buffer == "int8"
+        assert pol.opt == pol.model == "bfloat16"
+
+    def test_quant8_is_idempotent(self):
+        x = jnp.linspace(-5.0, 5.0, 257)
+        q = dtp.quant8(x, dtp.STATE_SCALE)
+        rq = dtp.quant8(dtp.dequant8(q, dtp.STATE_SCALE), dtp.STATE_SCALE)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(rq))
+        assert q.dtype == jnp.int8
+
+    def test_cast_floats_leaves_ints_alone(self):
+        tree = {"f": jnp.ones(3), "i": jnp.arange(3, dtype=jnp.int32),
+                "b": jnp.zeros(2, jnp.bool_)}
+        out = dtp.cast_floats(tree, "bfloat16")
+        assert out["f"].dtype == jnp.bfloat16
+        assert out["i"].dtype == jnp.int32
+        assert out["b"].dtype == jnp.bool_
+
+
+class TestFleetCast:
+    def test_leaf_count_is_policy_invariant(self):
+        """Fixed-scale int8 quantization adds no per-tensor scale leaves, so
+        the donation audit's leaf count holds under every policy."""
+        f32 = fleet_init(CFG, 4, KEY, n_pods=2)
+        lean = fleet_init(CFG, 4, KEY, n_pods=2, state_policy="lean")
+        assert len(jax.tree.leaves(f32)) == len(jax.tree.leaves(lean))
+
+    def test_float32_cast_is_identity(self):
+        fleet = fleet_init(CFG, 4, KEY, n_pods=2)
+        cast = fleet_cast(fleet, "float32")
+        for a, b in zip(jax.tree.leaves(fleet), jax.tree.leaves(cast)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_precision_critical_buffer_parts_stay_f32(self):
+        """Eviction scores (argmin) and the Cholesky moments must never
+        quantize — Eq. 6 selection order and diversity stats are exact."""
+        lean = fleet_init(CFG, 4, KEY, n_pods=2, state_policy="lean")
+        buf = lean.astate.buffer
+        assert buf.states.dtype == jnp.int8
+        assert buf.probs.dtype == jnp.int8
+        for leaf in (buf.score, buf.s_sum, buf.s_outer, buf.p_sum):
+            assert leaf.dtype == jnp.float32
+        for leaf in jax.tree.leaves(lean.astate.opt["m"]):
+            assert leaf.dtype == jnp.bfloat16
+
+    def test_lean_state_ratio_at_scale(self):
+        """The scaling gate's invariant at a tier-1-affordable shape: lean
+        storage must be >= 2x smaller per agent than float32 (measured
+        2.03x at A=256/P=8 — base networks amortize at scale)."""
+        a, p = 256, 8
+        f32 = fleet_state_bytes(fleet_init(CFG, a, KEY, n_pods=p))
+        lean = fleet_state_bytes(
+            fleet_init(CFG, a, KEY, n_pods=p, state_policy="lean"))
+        assert f32["per_agent"] / lean["per_agent"] >= 2.0
+
+
+class TestScanReferenceEquivalence:
+    @pytest.mark.parametrize("policy", POLICY_NAMES)
+    def test_scan_matches_reference_per_policy(self, policy):
+        """The same low-precision carry goes through both drivers: any
+        missing write-back cast would diverge them within a few episodes."""
+        n, eps = 4, 8
+        traces = fleet_traces(jax.random.PRNGKey(1), n, eps * CFG.n_steps)
+        kw = dict(straggler_prob=0.3, seed=7)
+        rf, rh = train_fleet_reference(
+            CFG, fleet_init(CFG, n, KEY, n_pods=2, state_policy=policy),
+            traces, **kw)
+        sf, sh = train_fleet_scan(
+            CFG, fleet_init(CFG, n, KEY, n_pods=2, state_policy=policy),
+            traces, **kw)
+        for k in rh:
+            np.testing.assert_allclose(sh[k], rh[k], rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{policy}:{k}")
+        for a, b in zip(jax.tree.leaves(rf.astate.params),
+                        jax.tree.leaves(sf.astate.params)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=1e-4, atol=1e-5)
+
+    def test_default_config_is_bit_identical_to_explicit_f32(self):
+        """state_policy=None must trace the exact pre-policy program: the
+        all-float32 astype write-backs are identities, so the compiled
+        computation — and every number — is unchanged."""
+        n, eps = 4, 6
+        traces = fleet_traces(jax.random.PRNGKey(1), n, eps * CFG.n_steps)
+        f_none, h_none = train_fleet_scan(
+            CFG, fleet_init(CFG, n, KEY, n_pods=2), traces, seed=7)
+        f_f32, h_f32 = train_fleet_scan(
+            CFG, fleet_init(CFG, n, KEY, n_pods=2, state_policy="float32"),
+            traces, seed=7)
+        for k in h_none:
+            np.testing.assert_array_equal(np.asarray(h_none[k]),
+                                          np.asarray(h_f32[k]), err_msg=k)
+        for a, b in zip(jax.tree.leaves(f_none), jax.tree.leaves(f_f32)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_lean_history_close_to_f32(self):
+        """Storage precision shifts trajectories only marginally: the first
+        episodes are identical-ish and rewards stay at parity."""
+        n, eps = 4, 8
+        traces = fleet_traces(jax.random.PRNGKey(1), n, eps * CFG.n_steps)
+        _, h32 = train_fleet_scan(
+            CFG, fleet_init(CFG, n, KEY, n_pods=2), traces, seed=7)
+        _, hl = train_fleet_scan(
+            CFG, fleet_init(CFG, n, KEY, n_pods=2, state_policy="lean"),
+            traces, seed=7)
+        tail = max(eps // 4, 2)
+        gap = abs(float(np.mean(hl["reward"][-tail:]))
+                  - float(np.mean(h32["reward"][-tail:])))
+        assert gap < 0.1, f"lean reward diverged from f32 by {gap}"
+
+
+class TestCheckpointDtypes:
+    @pytest.mark.parametrize("policy", POLICY_NAMES)
+    def test_roundtrip_exact_per_policy(self, policy):
+        """np.savez stores bf16 as raw void bytes; the manifest's dtype map
+        views them back exactly (int8 and f32 round-trip natively)."""
+        fleet = fleet_init(CFG, 3, KEY, n_pods=1, state_policy=policy)
+        with tempfile.TemporaryDirectory() as d:
+            ckpt_mod.save(d, 1, fleet)
+            restored, manifest = ckpt_mod.restore(d, 1, fleet)
+        assert "dtypes" in manifest
+        for a, b in zip(jax.tree.leaves(fleet), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_cross_policy_restore_widens_bf16(self):
+        """Elastic restore across state policies: a lean checkpoint restores
+        into a float32 fleet structure — bf16 leaves widen exactly."""
+        lean = fleet_init(CFG, 3, KEY, n_pods=1, state_policy="lean")
+        f32_like = fleet_cast(lean, "float32")
+        with tempfile.TemporaryDirectory() as d:
+            ckpt_mod.save(d, 1, lean)
+            restored, _ = ckpt_mod.restore(d, 1, f32_like)
+        for a, b in zip(jax.tree.leaves(lean.astate.params),
+                        jax.tree.leaves(restored.astate.params)):
+            assert b.dtype == jnp.float32
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b))
+
+    def test_resume_reproduces_uninterrupted_lean_run(self):
+        """Kill-and-resume under the lean policy: restore-then-continue must
+        reproduce the uninterrupted run (the checkpoint holds the exact
+        stored-precision leaves, not widened copies)."""
+        n, eps = 3, 6
+        traces = fleet_traces(jax.random.PRNGKey(1), n, eps * CFG.n_steps)
+        mk = lambda: fleet_init(CFG, n, KEY, n_pods=1, state_policy="lean")
+        full, hf = train_fleet_scan(CFG, mk(), traces, seed=7,
+                                    total_episodes=eps)
+        half1, _ = train_fleet_scan(CFG, mk(),
+                                    traces[:, :3 * CFG.n_steps], seed=7,
+                                    total_episodes=eps)
+        with tempfile.TemporaryDirectory() as d:
+            ckpt_mod.save(d, 3, half1)
+            restored, _ = ckpt_mod.restore(d, 3, mk())
+        half2, _ = train_fleet_scan(CFG, restored,
+                                    traces[:, 3 * CFG.n_steps:], seed=7,
+                                    episode_offset=3, total_episodes=eps)
+        for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(half2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
