@@ -36,7 +36,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import (REPO_ROOT, load_bench, load_rows, save_bench,
+from benchmarks.common import (BENCH_DIR, load_bench, load_rows, save_bench,
                                save_rows)
 from repro.configs.fcpo import FCPOConfig
 from repro.core.fleet import _scan_fn, fleet_init, train_fleet_scan
@@ -144,7 +144,10 @@ def run_tracing(n_agents=8, episodes=4, n_steps=3000, iters=5, seed=0,
 
 
 def _trace_path(smoke: bool) -> str:
-    return os.path.join(REPO_ROOT,
+    # Chrome traces land in artifacts/bench/ next to the BENCH_*.json
+    # envelopes (gitignored, uploaded by CI) — not the repo root.
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    return os.path.join(BENCH_DIR,
                         "trace_profile" + ("_smoke" if smoke else "") + ".json")
 
 

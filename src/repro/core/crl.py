@@ -43,7 +43,8 @@ class AgentState(NamedTuple):
 
 def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
                 rates: jnp.ndarray, mask: ActionMask,
-                use_pallas: bool = False, backend: EnvBackend = FLUID
+                use_pallas: bool = False, backend: EnvBackend = FLUID,
+                health: bool = False
                 ) -> Tuple[AgentState, Rollout, Dict[str, jnp.ndarray]]:
     """Collect one episode (rates: (n_steps,) arrivals per interval).
 
@@ -55,7 +56,11 @@ def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
     through the fused Pallas kernel instead of the jnp streaming scan.
     ``backend`` selects the environment (``core.backends``): the fluid MDP
     or the request-level twin; ``astate.env_state`` must be that backend's
-    state pytree (``fleet_init(..., env_backend=...)``)."""
+    state pytree (``fleet_init(..., env_backend=...)``). ``health`` adds a
+    ``"_health"`` entry of raw per-interval telemetry ((T,)/(T, K) arrays:
+    reward, SLO-miss rate, action marginals, arrival rate) to the metrics
+    for the fleet health observatory — the scalar metrics and every other
+    output are unchanged, so health-off stages the identical program."""
 
     def step(carry, rate):
         est, rng = carry
@@ -91,6 +96,11 @@ def run_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
         "drops": infos["drops"].mean(),
         "accuracy_proxy": infos["accuracy_proxy"].mean(),
     }
+    if health:
+        thr = infos["throughput"]
+        miss = (thr - infos["effective_throughput"]) / jnp.maximum(thr, 1e-9)
+        metrics["_health"] = {"reward": rewards, "miss": miss,
+                              "probs": probs, "rate": rates}
     new_state = AgentState(astate.params, astate.opt, buffer, env_state, rng)
     return new_state, rollout, metrics
 
@@ -143,11 +153,11 @@ def run_episode_reference(cfg: FCPOConfig, ep: env_mod.EnvParams,
 
 def crl_episode(cfg: FCPOConfig, ep: env_mod.EnvParams, astate: AgentState,
                 rates: jnp.ndarray, mask: ActionMask, learn: bool = True,
-                backend: EnvBackend = FLUID
+                backend: EnvBackend = FLUID, health: bool = False
                 ) -> Tuple[AgentState, Rollout, Dict[str, jnp.ndarray]]:
     """Episode + gated online update (the CRL inner loop)."""
     astate, rollout, metrics = run_episode(cfg, ep, astate, rates, mask,
-                                           backend=backend)
+                                           backend=backend, health=health)
     if learn:
         params, opt, lm = agent_update(cfg, astate.params, astate.opt,
                                        rollout, mask)

@@ -82,15 +82,26 @@ def total_utility(stats: ClientStats) -> jnp.ndarray:
     return util * jnp.sqrt(jnp.maximum(stats.bandwidth, 1e-3) / 10.0)
 
 
-def select_clients(cfg: FCPOConfig, stats: ClientStats) -> jnp.ndarray:
+def select_clients(cfg: FCPOConfig, stats: ClientStats,
+                   suspicion=None, susp_threshold: float = 0.0
+                   ) -> jnp.ndarray:
     """Top-⌈frac·A⌉ by TotalUtil among available clients -> (A,) bool mask.
-    Exactly k are chosen (argsort tie-break), minus any unavailable."""
+    Exactly k are chosen (argsort tie-break), minus any unavailable.
+
+    ``suspicion`` ((A,) in [0, 1], the health observatory's attribution
+    EMA from the previous round) with ``susp_threshold`` > 0 removes
+    suspect clients from the candidate pool *before* the top-k, so an
+    excluded attacker frees its slot for an honest client instead of
+    shrinking the round."""
     a = stats.available.shape[0]
     k = max(1, int(round(cfg.clients_per_round * a)))
-    utils = jnp.where(stats.available, total_utility(stats), -jnp.inf)
+    available = stats.available
+    if suspicion is not None and susp_threshold > 0.0:
+        available = available & (suspicion <= susp_threshold)
+    utils = jnp.where(available, total_utility(stats), -jnp.inf)
     order = jnp.argsort(-utils)
     sel = jnp.zeros((a,), bool).at[order[:k]].set(True)
-    return sel & stats.available
+    return sel & available
 
 
 # ---------------------------------------------------------------------------

@@ -45,6 +45,17 @@ from repro.fl import codec as fl_codec
 from repro.fl import staleness as fl_stale
 from repro.fl import transport as fl_transport
 from repro.fl.transport import DEFAULT_TRANSPORT, TransportConfig
+# the health observatory (repro.health) is a leaf layer like obs.trace:
+# pure pytree state + jnp ops, imports nothing from core, so the sketch /
+# drift / attribution updates stay inside the donated scan; health is a
+# jit-static config and the default (None) keeps the Fleet pytree and the
+# traced program exactly the pre-health ones
+from repro.health import HealthConfig
+from repro.health import attribution_scores as health_attribution
+from repro.health import episode_summaries as health_summaries
+from repro.health import health_init
+from repro.health import update_episode as health_update_episode
+from repro.health import update_round as health_update_round
 # the flight-recorder span layer (repro.obs.trace) is a leaf utility —
 # imports jax only, so `core` stays cycle-free; tracing is a jit-static
 # flag and the default (off) path traces the exact span-free program
@@ -63,11 +74,12 @@ class Fleet:
 
     FIELDS = ("astate", "base_params", "env_params", "masks", "group_ids",
               "pod_ids", "bandwidth", "speeds", "episode", "residuals",
-              "pending", "crash_timer", "partition_timer")
+              "pending", "crash_timer", "partition_timer", "health")
 
     def __init__(self, astate, base_params, env_params, masks, group_ids,
                  pod_ids, bandwidth, speeds, episode, residuals, pending,
-                 crash_timer, partition_timer, *, n_pods, group_counts):
+                 crash_timer, partition_timer, health=None, *, n_pods,
+                 group_counts):
         self.astate: AgentState = astate
         self.base_params = base_params
         self.env_params: env_mod.EnvParams = env_params
@@ -89,6 +101,12 @@ class Fleet:
         # stays inside the donated scan. All-zeros when faults are off.
         self.crash_timer = crash_timer
         self.partition_timer = partition_timer
+        # Health observatory state (repro.health.HealthState): per-agent
+        # telemetry sketches, drift detectors, and attribution suspicion.
+        # None (the default) flattens to an EMPTY subtree — the pytree, the
+        # donation audit, and every traced program are bit-identical to
+        # pre-health fleets, the same mechanism the tracer used.
+        self.health = health
         self.n_pods: int = n_pods
         self.group_counts: Dict[str, int] = group_counts
 
@@ -174,6 +192,7 @@ def fleet_state_bytes(fleet: Fleet) -> Dict[str, float]:
         "buffer": fleet.astate.buffer,
         "env": (fleet.astate.env_state, fleet.env_params),
         "transport": (fleet.residuals, fleet.pending),
+        "health": fleet.health,
         "misc": (fleet.masks, fleet.group_ids,
                  fleet.pod_ids, fleet.bandwidth, fleet.speeds,
                  fleet.astate.rng, fleet.crash_timer, fleet.partition_timer),
@@ -203,14 +222,18 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
                speeds: Optional[jnp.ndarray] = None,
                bandwidth: Optional[jnp.ndarray] = None,
                slo_s: Optional[float] = None, mesh=None,
-               env_backend=None, state_policy=None) -> Fleet:
+               env_backend=None, state_policy=None,
+               health: Optional[HealthConfig] = None) -> Fleet:
     """``env_backend``: ``"fluid"`` (default) / ``"twin"`` / an
     ``EnvBackend`` — the per-agent ``astate.env_state`` leaves are that
     backend's state pytree, so pass the SAME backend to the training
     drivers. ``state_policy``: a ``repro.core.dtypes`` policy name /
     ``StatePolicy`` — storage dtypes for the fleet state families
     (``fleet_cast``); the default (None) keeps the all-float32 layout,
-    bit-identical to pre-policy fleets."""
+    bit-identical to pre-policy fleets. ``health``: a
+    ``repro.health.HealthConfig`` — attaches the observatory state
+    (sketches, drift detectors, suspicion) to the pytree; None (default)
+    keeps the pre-health fleet exactly."""
     backend = get_backend(env_backend)
     kp, kb, ke, kr = jax.random.split(key, 4)
     agent_keys = jax.random.split(kp, n_agents)
@@ -251,6 +274,8 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
                   fl_stale.pending_init(params),
                   jnp.zeros((n_agents,), jnp.int32),
                   jnp.zeros((n_pods,), jnp.int32),
+                  health_init(health, n_agents, cfg.n_res + cfg.n_bs
+                              + cfg.n_mt) if health is not None else None,
                   n_pods=n_pods, group_counts=group_counts)
     if state_policy is not None:
         fleet = fleet_cast(fleet, state_policy)
@@ -259,27 +284,49 @@ def fleet_init(cfg: FCPOConfig, n_agents: int, key, *, n_pods: int = 1,
     return fleet
 
 
-@partial(jax.jit, static_argnums=0, static_argnames=("learn", "backend"))
+@partial(jax.jit, static_argnums=0,
+         static_argnames=("learn", "backend", "health"))
 def fleet_episode(cfg: FCPOConfig, fleet: Fleet, rates: jnp.ndarray,
-                  learn: bool = True, backend: EnvBackend = FLUID):
+                  learn: bool = True, backend: EnvBackend = FLUID,
+                  health: Optional[HealthConfig] = None):
     """One CRL episode for all agents. rates: (A, n_steps).
     Returns (fleet, rollouts, metrics). ``backend`` (static, hashable)
-    selects the environment the episodes run in."""
+    selects the environment the episodes run in. ``health`` (static)
+    advances every agent's telemetry sketches and drift detectors through
+    the episode's raw per-interval telemetry and merges their O(bins)
+    summaries into the metrics as (A,) arrays (``repro.health.
+    HEALTH_METRIC_KEYS``); the fleet must carry matching health state
+    (``fleet_init(..., health=...)``). None (default) stages the exact
+    pre-health program."""
     astate, rollouts, metrics = jax.vmap(
-        lambda ep, st, r, m: crl_episode(cfg, ep, st, r, m, learn, backend)
+        lambda ep, st, r, m: crl_episode(cfg, ep, st, r, m, learn, backend,
+                                         health=health is not None)
     )(fleet.env_params, fleet.astate, rates, fleet.masks)
-    fleet = fleet._replace(astate=astate, episode=fleet.episode + 1)
+    hstate = fleet.health
+    if health is not None:
+        if hstate is None:
+            raise ValueError("fleet_episode(health=...) needs a fleet with "
+                             "health state (fleet_init(..., health=...))")
+        tele = metrics.pop("_health")
+        hstate = health_update_episode(health, hstate, tele["reward"],
+                                       tele["miss"], tele["probs"],
+                                       tele["rate"])
+        metrics.update(health_summaries(health, hstate))
+    fleet = fleet._replace(astate=astate, episode=fleet.episode + 1,
+                           health=hstate)
     return fleet, rollouts, metrics
 
 
 @partial(jax.jit, static_argnums=0,
-         static_argnames=("transport", "guards", "faults", "trace"))
+         static_argnames=("transport", "guards", "faults", "trace",
+                          "health"))
 def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
              transport: Optional[TransportConfig] = None,
              guards: Optional[GuardConfig] = None,
              faults: Optional[FaultConfig] = None,
              byzantine=None, fault_key=None, *, trace: bool = False,
-             trace_id=None, trace_when=None, trace_token=None):
+             trace_id=None, trace_when=None, trace_token=None,
+             health: Optional[HealthConfig] = None):
     """One federated round: transport -> Eq. 7 selection -> Alg. 1
     aggregation -> Alg. 2 head fine-tuning.
 
@@ -307,6 +354,17 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
     spans; ``trace_when`` optionally samples emission at runtime. The
     default (trace off) compiles to the exact span-free round.
 
+    ``health`` (jit-static, ``repro.health.HealthConfig``) attributes the
+    round: every selected client's wire delta is scored against a
+    norm-clipped robust reference (per-client norm, cosine, leave-one-out
+    cosine -> suspicion in [0, 1], ``repro.health.attribution``), folded
+    into the fleet's suspicion EMA. With ``guards.susp_threshold`` > 0 the
+    *previous* round's EMA additionally gates Eq. 7 selection (scores for
+    this round's deltas cannot exist before aggregation, so the gate is
+    one round behind by construction). On the plain-transport path the
+    deltas are computed as a pure readout on the side — the aggregation
+    shortcut (and its bit-identical numerics) is preserved.
+
     Returns (fleet, sel, fl_metrics) where ``sel`` is the (A,) aggregation
     mask and ``fl_metrics`` the per-round communication/defense metrics
     (``repro.fl.transport.FL_METRIC_KEYS``)."""
@@ -314,6 +372,9 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
     if trace and trace_id is None:
         raise ValueError("fl_round(trace=True) needs a trace_id operand "
                          "(a registered repro.obs.trace.Tracer id)")
+    if health is not None and fleet.health is None:
+        raise ValueError("fl_round(health=...) needs a fleet with health "
+                         "state (fleet_init(..., health=...))")
     tok = None
     guards = DEFAULT_GUARDS if guards is None else guards
     byz_on = faults is not None and faults.byzantine_active
@@ -371,7 +432,15 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
         bandwidth=fleet.bandwidth,
         available=selectable,
     )
-    sel = fed.select_clients(cfg, stats)
+    if health is not None and guards.susp_threshold > 0.0:
+        # the attribution evidence stream closes into action: clients the
+        # PREVIOUS round scored suspect lose their selection slot to the
+        # next-best honest candidate
+        sel = fed.select_clients(cfg, stats, suspicion=fleet.health.susp,
+                                 susp_threshold=guards.susp_threshold)
+    else:
+        sel = fed.select_clients(cfg, stats)
+    health_rej = jnp.zeros((a,), bool)  # nonfinite-rejected => suspicion 1
 
     head_losses = jax.vmap(
         lambda p, r, m: fed.per_head_losses(cfg, p, r, m)
@@ -393,6 +462,20 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
             ok = guard_finite_mask(params)
             rejected = rejected + jnp.sum(sel & ~ok).astype(jnp.float32)
             sel_agg = sel & ok
+            health_rej = sel & ~ok
+        if health is not None:
+            # pure readout on the side: the shortcut above still aggregates
+            # the raw params, so the plain-path numerics stay bit-identical
+            # to health-off — the deltas vs the downlinked base exist only
+            # to be scored
+            base_h = jax.tree.map(
+                lambda b: shd.agent_hint(b[fleet.pod_ids]
+                                         .astype(jnp.float32)),
+                fleet.base_params)
+            delta_h = jax.tree.map(
+                lambda p, b: jnp.subtract(p.astype(jnp.float32), b),
+                params, base_h)
+            susp_new = health_attribution(delta_h, sel_agg)["susp"]
     else:
         if trace:
             tok = obs_trace.span_begin("fl/encode", trace_id, params, tok,
@@ -444,7 +527,13 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
         if guards.reject_nonfinite:
             ok = guard_finite_mask(contrib)
             rejected = rejected + jnp.sum(sel_agg & ~ok).astype(jnp.float32)
+            health_rej = sel_agg & ~ok
             sel_agg = sel_agg & ok
+        if health is not None:
+            # score the post-corruption wire deltas BEFORE clipping — the
+            # clip would erase exactly the magnitude evidence the norm
+            # term keys on
+            susp_new = health_attribution(contrib, sel_agg)["susp"]
         if guards.clip_factor > 0:
             contrib, clipped = guard_clip_deltas(contrib, sel_agg,
                                                  guards.clip_factor)
@@ -517,8 +606,16 @@ def fl_round(cfg: FCPOConfig, fleet: Fleet, rollouts, available=None,
         # is ordered after the last inner end callback (popped before the
         # metrics dict reaches the history)
         fl_metrics["_trace_tok"] = tok
+    new_health = fleet.health
+    if health is not None:
+        # a rejected contribution is maximal evidence — the client shipped
+        # garbage, whatever its direction would have scored
+        susp_new = jnp.where(health_rej, 1.0, susp_new)
+        new_health = health_update_round(health, fleet.health, susp_new,
+                                         sel_agg | health_rej)
     fleet = fleet._replace(astate=astate, base_params=new_base,
-                           residuals=residuals, pending=new_pending)
+                           residuals=residuals, pending=new_pending,
+                           health=new_health)
     return fleet, sel_agg, fl_metrics
 
 
@@ -551,6 +648,18 @@ def _normalize_chaos(faults, guards):
     return faults, guards
 
 
+def _ensure_health(cfg: FCPOConfig, fleet: Fleet,
+                   health: Optional[HealthConfig]) -> Fleet:
+    """Attach fresh observatory state when a health config is given but the
+    fleet predates it (e.g. a pre-health checkpoint) — a fleet that already
+    carries state keeps it (chunked runs accumulate across restores)."""
+    if health is not None and fleet.health is None:
+        a = int(fleet.pod_ids.shape[0])
+        fleet = fleet._replace(health=health_init(
+            health, a, cfg.n_res + cfg.n_bs + cfg.n_mt))
+    return fleet
+
+
 def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                           learn: bool = True, federated: bool = True,
                           straggler_prob: float = 0.0, seed: int = 0,
@@ -561,19 +670,22 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                           guards: Optional[GuardConfig] = None,
                           episode_offset: int = 0,
                           total_episodes: Optional[int] = None,
-                          tracer=None):
+                          tracer=None,
+                          health: Optional[HealthConfig] = None):
     """The original Python-loop driver: one host dispatch per episode plus a
     per-metric host sync — O(n_episodes) dispatches. Kept as the equivalence
     oracle for ``train_fleet_scan`` (same seeds => same straggler draws,
     same fault plan). ``metrics_sink`` gets the same per-episode records as
     the scan driver's streaming tap, appended directly from the loop.
-    ``faults``/``guards``/``episode_offset``/``total_episodes`` mirror
-    ``train_fleet_scan``. ``tracer`` records host-side episode / fl_round
-    spans (this driver dispatches per episode, so plain wall bracketing is
-    already phase-accurate; sampling follows ``span_sample_every``)."""
+    ``faults``/``guards``/``episode_offset``/``total_episodes``/``health``
+    mirror ``train_fleet_scan``. ``tracer`` records host-side episode /
+    fl_round spans (this driver dispatches per episode, so plain wall
+    bracketing is already phase-accurate; sampling follows
+    ``span_sample_every``)."""
     backend = get_backend(env_backend)
     transport = DEFAULT_TRANSPORT if transport is None else transport
     faults, guards = _normalize_chaos(faults, guards)
+    fleet = _ensure_health(cfg, fleet, health)
     a, total = traces.shape
     n_eps = total // cfg.n_steps
     total_eps = (episode_offset + n_eps if total_episodes is None
@@ -606,7 +718,8 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
         with hspan("episode", e):
             fleet, rollouts, metrics = fleet_episode(cfg, fleet, rates,
                                                      learn=learn,
-                                                     backend=backend)
+                                                     backend=backend,
+                                                     health=health)
             jax.block_until_ready(metrics)
         ran = None
         if crash_on:
@@ -626,7 +739,7 @@ def train_fleet_reference(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                     guards=guards, faults=faults,
                     byzantine=(jnp.asarray(plan.byzantine[e]) if byz_on
                                else None),
-                    fault_key=fkey)
+                    fault_key=fkey, health=health)
                 jax.block_until_ready(fl_metrics)
             if crash_on:
                 # a down agent is offline: it must not receive the round's
@@ -698,7 +811,8 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
                  trace_sample: jnp.ndarray, learn: bool,
                  backend: EnvBackend, transport: TransportConfig,
                  faults: Optional[FaultConfig],
-                 guards: GuardConfig, stream: bool, trace: bool):
+                 guards: GuardConfig, stream: bool, trace: bool,
+                 health: Optional[HealthConfig]):
     """Scan body host fn. rates_eps: (n_eps, A, n_steps); avail/do_fl/ep_idx:
     pre-drawn availability bits, FL schedule, and (absolute) episode
     indices, consumed as scan xs. crash_eps/byz_eps/part_eps: the pre-drawn
@@ -714,7 +828,10 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
     ``trace_id``/``trace_sample`` (operands) bracket the episode / FL-round
     / pod-merge phases with flight-recorder spans on every
     ``trace_sample``-th episode — same one-dispatch run, and the trace-off
-    program is the exact span-free one."""
+    program is the exact span-free one. ``health`` (static) advances the
+    observatory state through every episode and FL round (sketches, drift
+    detectors, attribution) — all pure pytree ops inside the scan; None
+    stages the exact health-free program."""
     crash_on = faults is not None and faults.crash_active
     byz_on = faults is not None and faults.byzantine_active
     part_on = faults is not None and faults.partition_active
@@ -728,7 +845,8 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
                                           when=when)
         prev_astate = flt.astate
         flt, rollouts, metrics = fleet_episode(cfg, flt, rates, learn=learn,
-                                               backend=backend)
+                                               backend=backend,
+                                               health=health)
         if trace:
             tok_ep = obs_trace.span_end("episode", trace_id, tok_ep,
                                         metrics, when=when)
@@ -752,7 +870,8 @@ def _scan_driver(cfg: FCPOConfig, fleet: Fleet, rates_eps: jnp.ndarray,
                                  fault_key=fkey, trace=trace,
                                  trace_id=trace_id if trace else None,
                                  trace_when=when,
-                                 trace_token=tok_fl if trace else None)
+                                 trace_token=tok_fl if trace else None,
+                                 health=health)
             if trace:
                 # the popped inner token orders this end after the round's
                 # last inner end callback (and keeps the metrics dict shapes
@@ -812,7 +931,7 @@ _SCAN_FNS: Dict[bool, Any] = {}
 
 def _scan_fn(donate: bool):
     if donate not in _SCAN_FNS:
-        kw = dict(static_argnums=(0, 13, 14, 15, 16, 17, 18, 19))
+        kw = dict(static_argnums=(0, 13, 14, 15, 16, 17, 18, 19, 20))
         if donate:
             kw["donate_argnums"] = (1,)
         _SCAN_FNS[donate] = jax.jit(_scan_driver, **kw)
@@ -823,7 +942,7 @@ def _prep_scan_args(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                     learn, federated, straggler_prob, seed, mesh,
                     env_backend, transport, faults, guards,
                     episode_offset, total_episodes,
-                    sink_id, stream, tracer):
+                    sink_id, stream, tracer, health=None):
     """Host-side argument prep shared by ``train_fleet_scan`` and
     ``lower_fleet_scan``: FL schedule, availability draws, fault plan,
     episode-major rate reshape, optional mesh sharding — returns the exact
@@ -831,6 +950,7 @@ def _prep_scan_args(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     backend = get_backend(env_backend)
     transport = DEFAULT_TRANSPORT if transport is None else transport
     faults, guards = _normalize_chaos(faults, guards)
+    fleet = _ensure_health(cfg, fleet, health)
     a, total = traces.shape
     n_eps = total // cfg.n_steps
     total_eps = (episode_offset + n_eps if total_episodes is None
@@ -868,7 +988,7 @@ def _prep_scan_args(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
             jnp.asarray(sink_id, jnp.int32), crash_eps, byz_eps, part_eps,
             jnp.asarray(rounds0, jnp.int32), jnp.asarray(tid, jnp.int32),
             jnp.asarray(tsamp, jnp.int32), learn, backend, transport,
-            faults, guards, stream, trace)
+            faults, guards, stream, trace, health)
 
 
 def lower_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
@@ -879,7 +999,8 @@ def lower_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                      faults: Optional[FaultConfig] = None,
                      guards: Optional[GuardConfig] = None,
                      episode_offset: int = 0,
-                     total_episodes: Optional[int] = None):
+                     total_episodes: Optional[int] = None,
+                     health: Optional[HealthConfig] = None):
     """Lower (without running) the exact scanned-driver program that
     ``train_fleet_scan`` would dispatch for these arguments — including
     buffer donation — and return the ``jax.stages.Lowered``. This is the
@@ -889,7 +1010,7 @@ def lower_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                            straggler_prob, seed, mesh, env_backend,
                            transport, faults, guards, episode_offset,
                            total_episodes, sink_id=0, stream=False,
-                           tracer=None)
+                           tracer=None, health=health)
     # trace under the mesh's resource env so the in-graph sharding hints
     # (sharding.ambient_mesh) resolve — the analyzed program is the meshed
     # program train_fleet_scan would run
@@ -908,7 +1029,8 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                      guards: Optional[GuardConfig] = None,
                      episode_offset: int = 0,
                      total_episodes: Optional[int] = None,
-                     tracer=None):
+                     tracer=None,
+                     health: Optional[HealthConfig] = None):
     """Scanned fleet driver: episodes over ``traces`` (A, total_steps), FL
     every ``fl_every`` episodes (stragglers masked by pre-drawn availability
     bits), cross-pod merge every ``hierarchical_period`` rounds — all inside
@@ -959,6 +1081,15 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
     by default, in which case the traced program is exactly the span-free
     one; the tracer object is addressed by a non-static integer id, so
     re-tracing the same-shaped run with a fresh tracer never recompiles.
+    ``health``: a jit-static ``repro.health.HealthConfig`` — the fleet
+    health observatory: per-agent telemetry sketches + drift detectors
+    advanced per control interval, FL contribution attribution per round,
+    all as pure pytree state inside the same single scan; the per-episode
+    summaries (``repro.health.HEALTH_METRIC_KEYS``) join the history and
+    the metrics stream. A fleet without health state gets fresh state
+    attached (``_ensure_health``). Off (None) by default, in which case
+    the traced program is exactly the health-free one — bit-identical
+    histories, unchanged donation audit.
     Returns (fleet, history) with history as per-episode numpy arrays,
     fetched in a single device->host transfer."""
     if donate is None:
@@ -973,7 +1104,7 @@ def train_fleet_scan(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                            straggler_prob, seed, mesh, env_backend,
                            transport, faults, guards, episode_offset,
                            total_episodes, sink_id=sid, stream=stream,
-                           tracer=tracer)
+                           tracer=tracer, health=health)
     try:
         # entering the mesh's resource env activates the in-graph sharding
         # hints (agents over (pod, data), pods over the FL hierarchy): the
@@ -1000,7 +1131,8 @@ def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                 straggler_prob: float = 0.0, seed: int = 0,
                 env_backend=None, transport: Optional[TransportConfig] = None,
                 metrics_sink=None, faults: Optional[FaultConfig] = None,
-                guards: Optional[GuardConfig] = None, tracer=None):
+                guards: Optional[GuardConfig] = None, tracer=None,
+                health: Optional[HealthConfig] = None):
     """Compatibility entry point — delegates to the scanned driver. Buffer
     donation stays off so callers may keep using the input fleet (forking a
     fleet into warm/cold copies is a common pattern in the benchmarks)."""
@@ -1009,4 +1141,5 @@ def train_fleet(cfg: FCPOConfig, fleet: Fleet, traces: jnp.ndarray,
                             straggler_prob=straggler_prob, seed=seed,
                             donate=False, env_backend=env_backend,
                             transport=transport, metrics_sink=metrics_sink,
-                            faults=faults, guards=guards, tracer=tracer)
+                            faults=faults, guards=guards, tracer=tracer,
+                            health=health)

@@ -167,6 +167,29 @@ def device_summary(records: List[Dict[str, Any]]
     return out
 
 
+def health_summary(records: List[Dict[str, Any]]) -> Optional[Dict[str, float]]:
+    """Fleet-health digest over the episodes that carried health metrics
+    (``health_*`` keys exist only when the run enabled the observatory, so
+    mixed pre-/post-PR-10 files reduce to the episodes that have them).
+    None when no record holds any health key (yet)."""
+    rows = [r for r in records if "health_drift_score" in r]
+    if not rows:
+        return None
+    mean = lambda key: float(sum(r.get(key, 0.0) for r in rows) / len(rows))
+    last = rows[-1]
+    return {
+        "episodes": float(len(rows)),
+        "drift_flags": float(sum(r.get("health_drift_flag", 0.0) > 0.0
+                                 for r in rows)),
+        "drift_score_last": float(last.get("health_drift_score", 0.0)),
+        "susp_last": float(last.get("health_susp", 0.0)),
+        "susp_max": float(max(r.get("health_susp", 0.0) for r in rows)),
+        "reward_p50_last": float(last.get("health_reward_p50", 0.0)),
+        "miss_p90_mean": mean("health_miss_p90"),
+        "act_entropy_last": float(last.get("health_act_entropy", 0.0)),
+    }
+
+
 def fl_round_summary(records: List[Dict[str, Any]]) -> Optional[Dict[str, float]]:
     """FL transport digest over the episodes that actually held a round
     (``fl_payload_bytes > 0``); None when the run had no rounds (yet)."""

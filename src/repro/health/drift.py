@@ -1,0 +1,129 @@
+"""Branchless change-point detectors carried as scan state.
+
+FCPO's premise is that edge MDPs drift — the CRL machinery exists because
+workload shifts invalidate the current policy. This module gives every
+agent a live drift signal *inside* the jitted scan: two classic sequential
+detectors over a standardized residual, all ``jnp.where`` (no data-
+dependent control flow), so the state vmaps over agents and scans over
+control intervals.
+
+Per monitored channel (reward, arrival rate) each agent carries:
+
+* slow EMA mean/variance — the "what normal looks like" baseline
+  (bootstrap as a running mean for the first ``warmup`` observations,
+  then exponential with rate ``ema_slow``);
+* fast EMA mean/variance — the "what now looks like" estimate the
+  detector re-anchors to after an alarm, so a detected shift becomes the
+  new normal instead of alarming forever;
+* **CUSUM** (two-sided): ``g+ <- max(0, g+ + z - k)``,
+  ``g- <- max(0, g- - z - k)``; alarm at ``h``. With the defaults
+  (k=0.5, h=10) the i.i.d. false-alarm probability per run is roughly
+  ``exp(-2kh) ~ 5e-5`` — the property test in
+  tests/test_health_properties.py leans on that margin;
+* **Page–Hinkley** (two-sided) on the same z: ``m <- m + z - delta``,
+  alarm when ``m - min(m)`` exceeds ``lambda`` — catches slow ramps
+  CUSUM's per-step drift allowance eats.
+
+``z`` is clipped to ``±zclip`` so one corrupt interval cannot fire the
+detector alone, and the variance is floored so a constant warmup stream
+does not produce infinite z. Detection is gated until ``warmup``
+observations have been seen (the baseline means nothing before that).
+
+``score``/``flag`` are episode-max accumulators (reset by
+``drift_reset_episode`` at each episode start) so the per-episode metrics
+stream reports "did this agent see a change-point this episode" even
+though the detector steps per interval.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class DriftState(NamedTuple):
+    """One detector channel for one agent (all leaves scalar; vmapped to
+    (A,) in the fleet). ``mu/var``: slow baseline; ``mu_f/var_f``: fast
+    re-anchor estimate; ``g_pos/g_neg``: CUSUM; ``m_up/m_up_min/m_dn/
+    m_dn_max``: Page–Hinkley accumulators and their running extrema;
+    ``score``/``flag``: episode-max normalized statistic / alarm."""
+    mu: jnp.ndarray
+    var: jnp.ndarray
+    mu_f: jnp.ndarray
+    var_f: jnp.ndarray
+    count: jnp.ndarray
+    g_pos: jnp.ndarray
+    g_neg: jnp.ndarray
+    m_up: jnp.ndarray
+    m_up_min: jnp.ndarray
+    m_dn: jnp.ndarray
+    m_dn_max: jnp.ndarray
+    score: jnp.ndarray
+    flag: jnp.ndarray
+
+
+def drift_init() -> DriftState:
+    z = jnp.zeros((), jnp.float32)
+    return DriftState(mu=z, var=z, mu_f=z, var_f=z, count=z, g_pos=z,
+                      g_neg=z, m_up=z, m_up_min=z, m_dn=z, m_dn_max=z,
+                      score=z, flag=z)
+
+
+def drift_reset_episode(s: DriftState) -> DriftState:
+    """Zero the episode-max outputs (call once per episode, before the
+    interval scan). Baselines and accumulators persist across episodes —
+    drift has no reason to respect episode boundaries."""
+    return s._replace(score=jnp.zeros_like(s.score),
+                      flag=jnp.zeros_like(s.flag))
+
+
+def drift_update(s: DriftState, x, *, k: float, h: float, ph_delta: float,
+                 ph_lambda: float, ema_slow: float, ema_fast: float,
+                 warmup: int, zclip: float, var_floor: float) -> DriftState:
+    """One observation through both detectors. Branchless; safe under
+    vmap/scan. On alarm the baseline re-anchors to the fast EMA and the
+    accumulators reset, so the shifted regime becomes the new normal."""
+    x = jnp.asarray(x, jnp.float32)
+    armed = (s.count >= warmup).astype(jnp.float32)
+
+    sd = jnp.sqrt(jnp.maximum(s.var, var_floor))
+    z = jnp.clip((x - s.mu) / sd, -zclip, zclip) * armed
+
+    g_pos = jnp.maximum(0.0, s.g_pos + z - k) * armed
+    g_neg = jnp.maximum(0.0, s.g_neg - z - k) * armed
+    m_up = (s.m_up + z - ph_delta) * armed
+    m_up_min = jnp.minimum(s.m_up_min, m_up)
+    m_dn = (s.m_dn + z + ph_delta) * armed
+    m_dn_max = jnp.maximum(s.m_dn_max, m_dn)
+    ph_up = m_up - m_up_min
+    ph_dn = m_dn_max - m_dn
+
+    stat = jnp.maximum(jnp.maximum(g_pos, g_neg) / h,
+                       jnp.maximum(ph_up, ph_dn) / ph_lambda)
+    alarm = (stat >= 1.0).astype(jnp.float32) * armed
+
+    # Baseline update: running mean during warmup, then slow EMA; the fast
+    # channel tracks the same recursion at ema_fast. Welford-style EW
+    # variance: var' = (1 - r)(var + r * delta^2).
+    boot = 1.0 / (s.count + 1.0)
+    r_s = jnp.where(s.count < warmup, boot, ema_slow)
+    d_s = x - s.mu
+    mu_s = s.mu + r_s * d_s
+    var_s = (1.0 - r_s) * (s.var + r_s * d_s * d_s)
+    r_f = jnp.maximum(ema_fast, boot)
+    d_f = x - s.mu_f
+    mu_f = s.mu_f + r_f * d_f
+    var_f = (1.0 - r_f) * (s.var_f + r_f * d_f * d_f)
+
+    return DriftState(
+        mu=jnp.where(alarm > 0, mu_f, mu_s),
+        var=jnp.where(alarm > 0, jnp.maximum(var_f, var_floor), var_s),
+        mu_f=mu_f, var_f=var_f, count=s.count + 1.0,
+        g_pos=jnp.where(alarm > 0, 0.0, g_pos),
+        g_neg=jnp.where(alarm > 0, 0.0, g_neg),
+        m_up=jnp.where(alarm > 0, 0.0, m_up),
+        m_up_min=jnp.where(alarm > 0, 0.0, m_up_min),
+        m_dn=jnp.where(alarm > 0, 0.0, m_dn),
+        m_dn_max=jnp.where(alarm > 0, 0.0, m_dn_max),
+        score=jnp.maximum(s.score, stat),
+        flag=jnp.maximum(s.flag, alarm))

@@ -1,0 +1,161 @@
+"""Telemetry sketches: fixed-size streaming summaries of per-interval signals.
+
+The fleet drivers run as ONE jitted donated scan; at A=2048 streaming every
+per-episode record off-device to see a distribution is exactly the host
+traffic the scan exists to avoid. A sketch is the fix: O(bins) pure pytree
+state per agent, rank-1 updated once per control interval *inside* the
+scan, queried as a handful of scalars per episode. Two sketch families:
+
+* **Fixed-bin histograms** (``hist_*``) over signals with a known range —
+  reward is ``tanh``-bounded in (-1, 1), the SLO-miss rate lives in
+  [0, 1]. Quantile queries invert the CDF with in-bin interpolation; the
+  estimate is guaranteed within ONE bin width of the exact inverted-CDF
+  empirical quantile of the stream (the bound tests/test_health*.py lock).
+* **P² marker sketches** (``p2_*``) — Jain & Chlamtac's five-marker
+  streaming quantile estimator: five heights + five positions + five
+  desired positions, updated per observation with the parabolic (P²)
+  interpolation formula, linear fallback when the parabola would break
+  marker monotonicity. Range-free (no bin bounds needed), O(1) state.
+
+Both are branchless (``jnp.where`` everywhere, no data-dependent control
+flow) so they vmap over the agent axis and scan over intervals without
+leaving the compiled program.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Fixed-bin histogram sketch
+# ---------------------------------------------------------------------------
+
+
+def hist_init(bins: int) -> jnp.ndarray:
+    """All-empty (bins,) float32 count vector."""
+    return jnp.zeros((bins,), jnp.float32)
+
+
+def hist_update(counts: jnp.ndarray, x, lo: float, hi: float) -> jnp.ndarray:
+    """Rank-1 update: drop one observation into its bin (out-of-range
+    values clamp to the edge bins, so the total count stays exact)."""
+    b = counts.shape[0]
+    i = jnp.clip(((x - lo) / (hi - lo) * b).astype(jnp.int32), 0, b - 1)
+    return counts.at[i].add(1.0)
+
+
+def hist_update_batch(counts: jnp.ndarray, xs: jnp.ndarray, lo: float,
+                      hi: float) -> jnp.ndarray:
+    """Whole-episode update: histogram counts commute, so a (T,) batch of
+    observations lands in ONE scatter-add — identical result to T
+    ``hist_update`` calls, with no sequential dependency for the compiler
+    to respect."""
+    b = counts.shape[0]
+    i = jnp.clip(((xs - lo) / (hi - lo) * b).astype(jnp.int32), 0, b - 1)
+    return counts.at[i].add(1.0)
+
+
+def hist_quantile(counts: jnp.ndarray, p: float, lo: float, hi: float):
+    """Inverted-CDF quantile with in-bin linear interpolation.
+
+    The exact empirical quantile (smallest x with CDF(x) >= p) lies in the
+    first bin whose cumulative count reaches ``p * total``; the returned
+    value lies in that same bin, so the value error is bounded by one bin
+    width for in-range streams. Returns ``lo`` on an empty sketch."""
+    b = counts.shape[0]
+    c = jnp.cumsum(counts)
+    total = c[-1]
+    target = p * total
+    i = jnp.clip(jnp.sum((c < target).astype(jnp.int32)), 0, b - 1)
+    prev = jnp.where(i > 0, c[jnp.maximum(i - 1, 0)], 0.0)
+    frac = jnp.clip((target - prev) / jnp.maximum(counts[i], 1e-9), 0.0, 1.0)
+    return lo + (hi - lo) * (i.astype(jnp.float32) + frac) / b
+
+
+def hist_merge(stacked_counts: jnp.ndarray) -> jnp.ndarray:
+    """Merge per-agent sketches (A, bins) into one fleet sketch (bins,) —
+    histograms over a shared range merge by addition, which is what makes
+    the per-agent state a fleet-watchable summary."""
+    return jnp.sum(stacked_counts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# P² streaming quantile sketch (Jain & Chlamtac 1985)
+# ---------------------------------------------------------------------------
+class P2State(NamedTuple):
+    """Five-marker P² state. ``q``: marker heights; ``n``: actual marker
+    positions (0-indexed ranks); ``npos``: desired positions; ``count``:
+    observations seen. Heights start at +inf so the warmup sort (first five
+    observations fill the markers) keeps empty slots at the top."""
+    q: jnp.ndarray      # (5,) f32 marker heights
+    n: jnp.ndarray      # (5,) f32 marker positions
+    npos: jnp.ndarray   # (5,) f32 desired marker positions
+    count: jnp.ndarray  # () f32
+
+
+def p2_init(p: float) -> P2State:
+    return P2State(
+        q=jnp.full((5,), jnp.inf, jnp.float32),
+        n=jnp.arange(5, dtype=jnp.float32),
+        npos=jnp.asarray([0.0, 2 * p, 4 * p, 2 + 2 * p, 4.0], jnp.float32),
+        count=jnp.zeros((), jnp.float32))
+
+
+def _safe_div(a, b):
+    return a / jnp.where(b == 0, 1.0, b)
+
+
+def p2_update(s: P2State, x, p: float) -> P2State:
+    """One observation, branchless. Warmup (count < 5): insert + sort (the
+    +inf fill keeps unfilled slots ordered above every real value). After:
+    the textbook P² step — locate the cell, shift marker positions, move
+    interior markers by the parabolic formula with linear fallback."""
+    x = jnp.asarray(x, jnp.float32)
+    c = s.count
+    in_warm = c < 5.0
+
+    # --- warmup: place x in the next free slot, keep heights sorted
+    slot = jnp.minimum(c, 4.0).astype(jnp.int32)
+    q_warm = jnp.sort(s.q.at[slot].set(x))
+
+    # --- steady state
+    q = s.q.at[0].min(x).at[4].max(x)
+    k = jnp.clip(jnp.sum((x >= q).astype(jnp.int32)) - 1, 0, 3)
+    n = s.n + (jnp.arange(5) > k).astype(jnp.float32)
+    npos = s.npos + jnp.asarray([0.0, p / 2, p, (1 + p) / 2, 1.0],
+                                jnp.float32)
+    for i in (1, 2, 3):
+        d = npos[i] - n[i]
+        up = (d >= 1.0) & (n[i + 1] - n[i] > 1.0)
+        dn = (d <= -1.0) & (n[i - 1] - n[i] < -1.0)
+        ds = jnp.where(up, 1.0, jnp.where(dn, -1.0, 0.0))
+        qp = q[i] + _safe_div(ds, n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + ds) * _safe_div(q[i + 1] - q[i],
+                                               n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - ds) * _safe_div(q[i] - q[i - 1],
+                                                 n[i] - n[i - 1]))
+        q_nb = jnp.where(ds > 0, q[i + 1], q[i - 1])
+        n_nb = jnp.where(ds > 0, n[i + 1], n[i - 1])
+        ql = q[i] + ds * _safe_div(q_nb - q[i], n_nb - n[i])
+        use_lin = (qp <= q[i - 1]) | (qp >= q[i + 1])
+        q = q.at[i].set(jnp.where(ds != 0,
+                                  jnp.where(use_lin, ql, qp), q[i]))
+        n = n.at[i].set(n[i] + ds)
+
+    return P2State(
+        q=jnp.where(in_warm, q_warm, q),
+        n=jnp.where(in_warm, s.n, n),
+        npos=jnp.where(in_warm, s.npos, npos),
+        count=c + 1.0)
+
+
+def p2_value(s: P2State):
+    """The current quantile estimate (the middle marker). During warmup
+    (< 5 observations) falls back to the median of the filled slots."""
+    filled = jnp.isfinite(s.q)
+    n_f = jnp.maximum(jnp.sum(filled.astype(jnp.int32)), 1)
+    # pad unfilled slots HIGH (+inf, matching the warmup sort) so the
+    # lower-median index lands on a real observation
+    mid = jnp.sort(jnp.where(filled, s.q, jnp.inf))[(n_f - 1) // 2]
+    return jnp.where(s.count >= 5.0, s.q[2], mid)

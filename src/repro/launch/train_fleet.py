@@ -58,6 +58,8 @@ from repro.core.fleet import (fleet_device_bytes, fleet_init,
                               train_fleet_scan)
 from repro.eval.stream import MetricsSink
 from repro.fl import CODECS, TransportConfig
+from repro.health import HealthConfig
+from repro.health.alerts import AlertEngine
 from repro.core.dtypes import POLICIES
 from repro.launch.mesh import (make_debug_mesh, make_fleet_mesh,
                                make_production_mesh)
@@ -146,6 +148,26 @@ def main(argv=None):
     ap.add_argument("--trace-sample", type=int, default=1,
                     help="record spans only on every Nth episode (runtime "
                          "sampling — changing it never recompiles)")
+    # --- fleet health observatory (repro.health) ---
+    ap.add_argument("--health", action="store_true",
+                    help="attach the fleet health observatory: per-agent "
+                         "telemetry sketches + drift detectors advanced "
+                         "inside the scan, FL contribution attribution per "
+                         "round; per-episode health_* summaries join the "
+                         "history and the --metrics-out stream")
+    ap.add_argument("--health-bins", type=int, default=16,
+                    help="histogram sketch resolution (quantile error is "
+                         "bounded by one bin width)")
+    ap.add_argument("--susp-threshold", type=float, default=0.0,
+                    help="act on the attribution evidence: clients whose "
+                         "suspicion EMA exceeds this are dropped from Eq. 7 "
+                         "selection (one round behind by construction). "
+                         "0 observes without acting; requires --health")
+    ap.add_argument("--alerts-out", type=str, default=None,
+                    help="evaluate the declarative health alert rules "
+                         "(repro.health.alerts.DEFAULT_RULES) over the "
+                         "metrics stream and write fire/resolve lines to "
+                         "this ALERTS.jsonl; requires --health")
     # --- chaos layer: fault injection (repro.resilience.FaultConfig) ---
     ap.add_argument("--fault-crash-prob", type=float, default=0.0,
                     help="per-agent per-episode crash probability: the "
@@ -249,6 +271,14 @@ def main(argv=None):
         ap.error("--ckpt-every/--stop-after must be >= 0, --keep-last >= 1")
     if args.trace_sample < 1:
         ap.error("--trace-sample must be >= 1")
+    if args.susp_threshold and not args.health:
+        ap.error("--susp-threshold gates selection on the suspicion EMA "
+                 "the observatory maintains; add --health")
+    if args.alerts_out and not args.health:
+        ap.error("--alerts-out evaluates rules over the health_* metrics; "
+                 "add --health")
+    if args.health_bins != 16 and not args.health:
+        ap.error("--health-bins only affects the observatory; add --health")
 
     cfg = FCPOConfig() if args.fl_every is None else \
         FCPOConfig(fl_every=args.fl_every)
@@ -263,7 +293,9 @@ def main(argv=None):
         seed=args.fault_seed)
     guards = GuardConfig(agg=args.robust_agg, trim_frac=args.trim_frac,
                          clip_factor=args.clip_factor,
-                         reject_nonfinite=not args.no_reject_nonfinite)
+                         reject_nonfinite=not args.no_reject_nonfinite,
+                         susp_threshold=args.susp_threshold)
+    health = HealthConfig(bins=args.health_bins) if args.health else None
     transport = TransportConfig(codec=args.fl_codec,
                                 topk_frac=args.fl_topk_frac,
                                 deadline_s=args.fl_deadline_s,
@@ -286,7 +318,8 @@ def main(argv=None):
                        n_pods=args.pods, mesh=mesh, env_backend=backend,
                        state_policy=(args.state_dtype
                                      if args.state_dtype != "float32"
-                                     else None))
+                                     else None),
+                       health=health)
     traces = make_scenario(args.scenario, jax.random.PRNGKey(args.seed + 1),
                            args.agents, args.episodes * cfg.n_steps)
     print(f"fleet: {args.agents} iAgents, {args.pods} pods, "
@@ -299,7 +332,8 @@ def main(argv=None):
     kw = dict(learn=not args.no_learn, federated=not args.no_federated,
               straggler_prob=args.straggler_prob, seed=args.seed,
               env_backend=backend, transport=transport,
-              faults=faults if faults.active else None, guards=guards)
+              faults=faults if faults.active else None, guards=guards,
+              health=health)
     # detect the auto-resume BEFORE opening the metrics sink: a resumed run
     # must append to the metrics file, not truncate the pre-kill episodes
     resume_from = (ckpt_mod.latest_step(args.ckpt_dir) or 0) \
@@ -316,6 +350,13 @@ def main(argv=None):
             print(f"metrics resume: appending to {args.metrics_out} "
                   f"({sink.n_records} episodes already recorded)")
         kw["metrics_sink"] = sink
+    engine = None
+    if args.alerts_out:
+        # the alert engine tees in front of the JSONL sink (or runs
+        # standalone without --metrics-out): every streamed record is
+        # forwarded AND evaluated against the rulebook
+        engine = AlertEngine(args.alerts_out, forward=sink)
+        kw["metrics_sink"] = engine
     tracer = None
     if args.trace_out:
         from repro.obs.trace import Tracer
@@ -386,7 +427,9 @@ def main(argv=None):
                 row[f"dev{d}_bytes"] = b
             sink.append(row)
     finally:
-        if sink is not None:
+        if engine is not None:
+            engine.close()  # closes the forwarded sink too
+        elif sink is not None:
             sink.close()
         if tracer is not None:
             tracer.export(args.trace_out)
@@ -417,6 +460,15 @@ def main(argv=None):
               f"stale joins {hist['fl_stale_used'][fl_eps].mean():.2f}/round, "
               f"rejected {np.asarray(hist.get('fl_rejected', 0.0)).sum():.0f}, "
               f"clipped {np.asarray(hist.get('fl_clipped', 0.0)).sum():.0f}")
+    if health is not None and "health_drift_score" in hist:
+        flags = np.asarray(hist["health_drift_flag"])
+        print(f"\nhealth: drift flags on {np.count_nonzero(flags)} of "
+              f"{flags.size} episodes, "
+              f"drift score last {hist['health_drift_score'][-1]:.2f}, "
+              f"reward p50 last {hist['health_reward_p50'][-1]:.3f}, "
+              f"susp last {hist['health_susp'][-1]:.3f}"
+              + (f"; {engine.n_alerts} alerts -> {args.alerts_out}"
+                 if engine is not None else ""))
     if faults.active:
         print(f"\nchaos: crash_prob={faults.crash_prob}, "
               f"byzantine={faults.byzantine_frac} "

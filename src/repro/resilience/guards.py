@@ -15,6 +15,12 @@
   containing NaN/Inf from the aggregation mask before they touch any pod
   member. On by default: the check is the identity on healthy rounds, so
   the default config stays bit-identical seed-for-seed.
+* ``susp_threshold`` — evidence stream from the health observatory
+  (``health/attribution.py``): when > 0 *and* health state is enabled,
+  clients whose suspicion EMA from the previous round exceeds the
+  threshold are dropped from selection before aggregation
+  (``suspicion_gate``). 0 disables; attribution then still *scores*
+  clients (observability) without acting on them.
 """
 from __future__ import annotations
 
@@ -32,6 +38,7 @@ class GuardConfig:
     trim_frac: float = 0.2
     clip_factor: float = 0.0
     reject_nonfinite: bool = True
+    susp_threshold: float = 0.0
 
     def __post_init__(self):
         if self.agg not in AGG_METHODS:
@@ -41,6 +48,8 @@ class GuardConfig:
             raise ValueError("trim_frac must be in [0, 0.5)")
         if self.clip_factor < 0.0:
             raise ValueError("clip_factor must be >= 0")
+        if not (0.0 <= self.susp_threshold <= 1.0):
+            raise ValueError("susp_threshold must be in [0, 1]")
 
 
 DEFAULT_GUARDS = GuardConfig()
@@ -63,6 +72,16 @@ def _masked_median_1d(x, mask):
     lo = srt[jnp.maximum((n - 1) // 2, 0)]
     hi = srt[jnp.maximum(n // 2, 0)]
     return 0.5 * (lo + hi)
+
+
+def suspicion_gate(sel, suspicion, threshold: float):
+    """Drop clients whose suspicion exceeds ``threshold`` from the
+    selection mask. Returns ``(gated_sel, n_gated)``. Suspicion is the
+    previous round's attribution EMA (scores for *this* round's deltas do
+    not exist until after aggregation), so the gate reacts one round late
+    by construction — documented in docs/observability.md."""
+    hit = sel & (suspicion > threshold)
+    return sel & ~hit, jnp.sum(hit).astype(jnp.float32)
 
 
 def clip_deltas(contrib, sel, clip_factor: float):

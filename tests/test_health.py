@@ -1,0 +1,387 @@
+"""Fleet health observatory: sketch accuracy, drift detection, FL
+contribution attribution, driver wiring (scan == reference, off-mode
+bit-identity), alert rules, and the watch CLI rendering.
+
+Deterministic tier-1 slice; tests/test_health_properties.py carries the
+hypothesis generalizations of the sketch/detector invariants. Deselect
+the whole observatory with ``-m "not health"``.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fcpo import FCPOConfig
+from repro.core import federated as fed
+from repro.core.fleet import (fleet_init, train_fleet_reference,
+                              train_fleet_scan)
+from repro.data.workload import (drift_traces, fleet_traces,
+                                 flash_crowd_traces, switching_traces)
+from repro.health import (HEALTH_METRIC_KEYS, HealthConfig, health_init,
+                          update_episode)
+from repro.health.alerts import (AlertEngine, AlertRule, DEFAULT_RULES,
+                                 read_alerts)
+from repro.health.attribution import (_masked_lower_median,
+                                      attribution_scores,
+                                      robust_reference_weights)
+from repro.health.drift import drift_init, drift_reset_episode, drift_update
+from repro.health.sketch import (hist_init, hist_merge, hist_quantile,
+                                 hist_update, hist_update_batch, p2_init,
+                                 p2_update, p2_value)
+from repro.launch.watch import render
+from repro.resilience import GuardConfig
+from repro.resilience.guards import suspicion_gate
+
+pytestmark = pytest.mark.health
+
+CFG = FCPOConfig()
+KEY = jax.random.PRNGKey(0)
+DK = dict(k=0.5, h=10.0, ph_delta=0.2, ph_lambda=25.0, ema_slow=0.02,
+          ema_fast=0.3, warmup=20, zclip=8.0, var_floor=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Sketches
+# ---------------------------------------------------------------------------
+class TestHistogram:
+    def test_quantile_within_one_bin_width(self):
+        rng = np.random.default_rng(0)
+        xs = rng.uniform(-1.0, 1.0, size=500).astype(np.float32)
+        counts = hist_update_batch(hist_init(16), jnp.asarray(xs), -1.0, 1.0)
+        width = 2.0 / 16
+        for p in (0.1, 0.5, 0.9):
+            est = float(hist_quantile(counts, p, -1.0, 1.0))
+            exact = float(np.quantile(xs, p, method="inverted_cdf"))
+            assert abs(est - exact) <= width + 1e-6, (p, est, exact)
+
+    def test_batch_update_matches_sequential(self):
+        rng = np.random.default_rng(1)
+        xs = rng.normal(0.0, 0.7, size=64).astype(np.float32)
+        seq = hist_init(8)
+        for x in xs:
+            seq = hist_update(seq, x, -1.0, 1.0)
+        batch = hist_update_batch(hist_init(8), jnp.asarray(xs), -1.0, 1.0)
+        np.testing.assert_array_equal(np.asarray(seq), np.asarray(batch))
+        # out-of-range values clamp to edge bins: the count stays exact
+        assert float(jnp.sum(batch)) == len(xs)
+
+    def test_merge_is_additive(self):
+        a = hist_update_batch(hist_init(8), jnp.linspace(-0.9, 0.0, 10),
+                              -1.0, 1.0)
+        b = hist_update_batch(hist_init(8), jnp.linspace(0.0, 0.9, 10),
+                              -1.0, 1.0)
+        merged = hist_merge(jnp.stack([a, b]))
+        np.testing.assert_allclose(np.asarray(merged), np.asarray(a + b))
+
+
+class TestP2:
+    def test_median_converges(self):
+        rng = np.random.default_rng(2)
+        xs = rng.normal(0.2, 0.3, size=600).astype(np.float32)
+        s = p2_init(0.5)
+        for x in xs:
+            s = p2_update(s, x, 0.5)
+        est = float(p2_value(s))
+        assert abs(est - float(np.median(xs))) < 0.05
+
+    def test_warmup_is_exact(self):
+        s = p2_init(0.5)
+        for x in (0.3, -0.5, 0.1):
+            s = p2_update(s, x, 0.5)
+        assert float(p2_value(s)) == pytest.approx(0.1)  # median of 3
+
+
+# ---------------------------------------------------------------------------
+# Drift detectors
+# ---------------------------------------------------------------------------
+def _run_detector(xs):
+    def step(s, x):
+        s = drift_update(s, x, **DK)
+        return s, (s.flag, s.score)
+    _, (flags, _) = jax.lax.scan(step, drift_init(),
+                                 jnp.asarray(xs, jnp.float32))
+    return np.asarray(flags)
+
+
+class TestDrift:
+    def test_silent_on_iid(self):
+        rng = np.random.default_rng(3)
+        flags = _run_detector(rng.normal(0.0, 1.0, size=400))
+        assert flags.max() == 0.0
+
+    def test_fires_on_step_shift(self):
+        rng = np.random.default_rng(4)
+        xs = np.concatenate([rng.normal(0.0, 1.0, size=200),
+                             rng.normal(3.0, 1.0, size=100)])
+        flags = _run_detector(xs)
+        assert flags[:200].max() == 0.0
+        fired = np.nonzero(flags[200:])[0]
+        assert fired.size > 0 and fired[0] <= 50
+
+    def test_reset_clears_episode_accumulators_not_baseline(self):
+        rng = np.random.default_rng(5)
+        s = drift_init()
+        for x in rng.normal(0.0, 1.0, size=100):
+            s = drift_update(s, float(x), **DK)
+        r = drift_reset_episode(s)
+        assert float(r.flag) == 0.0 and float(r.score) == 0.0
+        np.testing.assert_allclose(float(r.mu), float(s.mu))
+
+
+# ---------------------------------------------------------------------------
+# Attribution
+# ---------------------------------------------------------------------------
+def _deltas(rows):
+    return {"w": jnp.asarray(np.stack(rows), jnp.float32)}
+
+
+class TestAttribution:
+    def test_sign_flip_byzantine_ranks_top(self):
+        rng = np.random.default_rng(6)
+        honest = rng.normal(size=(5, 32)).astype(np.float32) * 0.05
+        honest += honest.mean(axis=0)  # coherent fleet direction
+        byz = -25.0 * honest[0]
+        deltas = _deltas(list(honest) + [byz])
+        sel = jnp.ones((6,), jnp.float32)
+        susp = np.asarray(attribution_scores(deltas, sel)["susp"])
+        assert susp.argmax() == 5
+        assert susp[5] > 2 * susp[:5].max()
+
+    def test_half_byzantine_selection_still_ranks(self):
+        """The 2-of-4 regression: with half the *selected* set byzantine,
+        the interpolated median norm averages an honest and an attacker
+        norm and the clip stops vanishing — the lower median keeps the
+        clip scale honest and the attackers on top."""
+        rng = np.random.default_rng(7)
+        base = rng.normal(size=32).astype(np.float32)
+        mk = lambda: (0.6 * base + rng.normal(size=32) * 0.4).astype(
+            np.float32) * 0.05
+        h0, h1, b0, b1 = mk(), mk(), mk(), mk()
+        deltas = _deltas([h0, h1, 0 * h0, -25.0 * b0,
+                          0 * h0, 0 * h0, -25.0 * b1, 0 * h0])
+        sel = jnp.asarray([1, 1, 0, 1, 0, 0, 1, 0], jnp.float32)
+        out = attribution_scores(deltas, sel)
+        susp = np.asarray(out["susp"])
+        assert min(susp[3], susp[6]) > max(susp[0], susp[1])
+        assert susp[2] == susp[4] == 0.0  # unselected never score
+
+    def test_lower_median_ignores_inflated_half(self):
+        norms = jnp.asarray([1.0, 1.1, 25.0, 26.0], jnp.float32)
+        mask = jnp.ones((4,), bool)
+        assert float(_masked_lower_median(norms, mask)) == pytest.approx(1.1)
+        w = robust_reference_weights(
+            jnp.asarray([1.0, 1.1, 25.0, 26.0, 99.0], jnp.float32),
+            jnp.asarray([1, 1, 1, 1, 0], jnp.float32))
+        assert float(w[4]) == 0.0                       # unselected
+        assert float(w[0]) == 1.0                       # honest full weight
+        assert float(w[2]) < (1.1 / 25.0) ** 2 * 1.01   # squared clip
+
+
+class TestSuspicionGating:
+    def test_gate_drops_suspects(self):
+        sel = jnp.asarray([True, True, True, False])
+        susp = jnp.asarray([0.9, 0.2, 0.6, 0.95])
+        gated, n = suspicion_gate(sel, susp, 0.5)
+        np.testing.assert_array_equal(np.asarray(gated),
+                                      [False, True, False, False])
+        assert float(n) == 2.0  # already-unselected suspect not counted
+
+    def test_select_clients_refills_freed_slots(self):
+        a = 4
+        stats = fed.ClientStats(
+            mem_avail=jnp.full((a,), 0.5) + jnp.arange(a) * 0.1,
+            compute_avail=jnp.full((a,), 0.5),
+            diversity=jnp.full((a,), 1.0),
+            bandwidth=jnp.full((a,), 10.0),
+            available=jnp.ones((a,), bool))
+        plain = fed.select_clients(CFG, stats)
+        k = int(np.asarray(plain).sum())
+        susp = jnp.where(plain, 0.9, 0.0)  # everyone chosen is suspect
+        gated = fed.select_clients(CFG, stats, suspicion=susp,
+                                   susp_threshold=0.5)
+        assert int(np.asarray(gated).sum()) == k  # slots refilled
+        assert not bool(np.asarray(gated & plain).any())
+
+
+# ---------------------------------------------------------------------------
+# Driver wiring
+# ---------------------------------------------------------------------------
+class TestDriverWiring:
+    def test_scan_matches_reference_with_health(self):
+        n, eps = 3, 6
+        health = HealthConfig()
+        traces = fleet_traces(jax.random.PRNGKey(1), n, eps * CFG.n_steps)
+        f_ref = fleet_init(CFG, n, KEY, health=health)
+        f_scan = fleet_init(CFG, n, KEY, health=health)
+        kw = dict(straggler_prob=0.3, seed=7, health=health)
+        _, rh = train_fleet_reference(CFG, f_ref, traces, **kw)
+        sf, sh = train_fleet_scan(CFG, f_scan, traces, **kw)
+        assert sorted(rh) == sorted(sh)
+        for k in HEALTH_METRIC_KEYS:
+            assert k in sh
+        for k in rh:
+            np.testing.assert_allclose(np.asarray(sh[k]), np.asarray(rh[k]),
+                                       rtol=1e-4, atol=1e-5, err_msg=k)
+
+    def test_health_off_is_bit_identical(self):
+        n, eps = 3, 6
+        health = HealthConfig()
+        traces = fleet_traces(jax.random.PRNGKey(1), n, eps * CFG.n_steps)
+        kw = dict(straggler_prob=0.3, seed=7)
+        f_off, h_off = train_fleet_scan(
+            CFG, fleet_init(CFG, n, KEY), traces, **kw)
+        f_on, h_on = train_fleet_scan(
+            CFG, fleet_init(CFG, n, KEY, health=health), traces,
+            health=health, **kw)
+        for k in h_off:
+            np.testing.assert_array_equal(np.asarray(h_off[k]),
+                                          np.asarray(h_on[k]), err_msg=k)
+        for a, b in zip(jax.tree.leaves(f_off),
+                        jax.tree.leaves(f_on._replace(health=None))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert len(jax.tree.leaves(f_on)) > len(jax.tree.leaves(f_off))
+
+    def test_update_episode_rejects_indivisible_stride(self):
+        health = HealthConfig(stride=3)
+        state = health_init(health, 2, 4)
+        bad = jnp.zeros((2, 10))
+        with pytest.raises(ValueError, match="stride"):
+            update_episode(health, state, bad, bad,
+                           jnp.zeros((2, 10, 4)), bad)
+
+
+class TestDriftScenarios:
+    """The detectors flag the paper's non-stationary workloads (Fig. 13
+    regimes) and stay quiet on a narrow stationary trace — end-to-end
+    through the jitted scan, frozen policy so the workload is the only
+    change-point source."""
+    N, EPS = 2, 10
+    HEALTH = HealthConfig(stride=1, warmup=30)
+    KW = dict(learn=False, federated=False)
+
+    def _flags(self, traces):
+        health = self.HEALTH
+        fleet = fleet_init(CFG, self.N, KEY, health=health)
+        _, hist = train_fleet_scan(CFG, fleet, traces, health=health,
+                                   **self.KW)
+        return np.asarray(hist["health_drift_flag"])
+
+    def test_stationary_is_quiet(self):
+        # a constant arrival rate: the only variation left is the env's
+        # own sampling noise, which the standardized residual absorbs
+        traces = jnp.full((self.N, self.EPS * CFG.n_steps), 30.0)
+        assert self._flags(traces).max() == 0.0
+
+    @pytest.mark.parametrize("gen", [switching_traces, flash_crowd_traces,
+                                     drift_traces],
+                             ids=["switching", "flash_crowd", "drift"])
+    def test_nonstationary_fires(self, gen):
+        traces = gen(jax.random.PRNGKey(11), self.N, self.EPS * CFG.n_steps)
+        assert self._flags(traces).max() > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Alerts + watch
+# ---------------------------------------------------------------------------
+class _ListSink:
+    def __init__(self):
+        self.records, self.closed = [], False
+        self.n_records = 0
+
+    def append(self, r):
+        self.records.append(r)
+        self.n_records += 1
+
+    def close(self):
+        self.closed = True
+
+
+class TestAlerts:
+    RULES = (AlertRule("hot", "temp", "gt", 0.5, window=2),)
+
+    def test_fire_latches_and_resolves(self, tmp_path):
+        path = str(tmp_path / "ALERTS.jsonl")
+        with AlertEngine(path, rules=self.RULES) as eng:
+            for i, v in enumerate([0.1, 0.9, 0.9, 0.9, 0.2, 0.9, 0.9]):
+                eng.append({"episode": i, "temp": v})
+        alerts = read_alerts(path)
+        kinds = [(a["kind"], a["episode"]) for a in alerts]
+        # window=2: fires at ep2, one line while latched, resolves at ep4,
+        # re-fires at ep6
+        assert kinds == [("alert", 2), ("resolve", 4), ("alert", 6)]
+
+    def test_tee_forwards_and_skips_foreign_records(self, tmp_path):
+        path = str(tmp_path / "ALERTS.jsonl")
+        sink = _ListSink()
+        with AlertEngine(path, rules=self.RULES, forward=sink) as eng:
+            eng.append({"episode": 0, "temp": 0.9})
+            eng.append({"devices": 8})          # no metric: rule untouched
+            eng.append({"episode": 1, "temp": 0.9})
+        assert len(sink.records) == 3 and sink.closed
+        assert eng.n_records == 3
+        # the device record did not advance the window-2 streak
+        assert [a["episode"] for a in read_alerts(path)] == [1]
+
+    def test_default_rules_validate(self):
+        assert any(r.metric == "health_drift_flag" for r in DEFAULT_RULES)
+        with pytest.raises(ValueError):
+            AlertRule("bad", "m", "ge", 0.0)
+        with pytest.raises(ValueError):
+            AlertRule("bad", "m", "gt", 0.0, severity="loud")
+
+    def test_read_alerts_tolerates_torn_tail(self, tmp_path):
+        path = str(tmp_path / "ALERTS.jsonl")
+        with open(path, "w") as f:
+            f.write(json.dumps({"kind": "alert", "rule": "r"}) + "\n")
+            f.write('{"kind": "alert", "ru')  # torn mid-append
+        assert len(read_alerts(path)) == 1
+        assert read_alerts(str(tmp_path / "missing.jsonl")) == []
+
+
+class TestWatchRender:
+    def _write(self, path, rows, meta=None):
+        with open(path, "w") as f:
+            f.write(json.dumps({"kind": "meta", **(meta or {})}) + "\n")
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+
+    def test_mixed_schema_renders_health_digest(self, tmp_path):
+        """Half the records predate the observatory (no health keys) — the
+        digest reduces to the episodes that carry them, the table renders,
+        nothing crashes."""
+        path = str(tmp_path / "run.jsonl")
+        rows = [{"episode": e, "reward": 0.1 * e} for e in range(3)]
+        rows += [{"episode": e, "reward": 0.1 * e,
+                  "health_drift_score": 0.2, "health_drift_flag": 1.0,
+                  "health_reward_p50": 0.4, "health_miss_p90": 0.1,
+                  "health_susp": 0.7} for e in range(3, 6)]
+        self._write(path, rows, meta={"agents": 2})
+        out = render(path, tail_k=4)
+        assert "episodes recorded: 6" in out
+        assert "health: 3 episodes, drift flags on 3" in out
+        assert "health_susp" in out
+
+    def test_no_health_keys_renders_as_before(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        self._write(path, [{"episode": 0, "reward": 0.5}])
+        out = render(path, tail_k=4)
+        assert "health:" not in out and "alerts:" not in out
+
+    def test_alerts_tail(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        self._write(path, [{"episode": 0, "reward": 0.5}])
+        apath = str(tmp_path / "ALERTS.jsonl")
+        with AlertEngine(apath, rules=(
+                AlertRule("hot", "reward", "gt", 0.1, severity="crit"),)) \
+                as eng:
+            eng.append({"episode": 0, "reward": 0.5})
+        out = render(path, tail_k=4, alerts_path=apath)
+        assert "alerts: 1 fired" in out
+        assert "[CRIT" in out and "hot: reward gt 0.1" in out
+        # a missing alerts file renders an empty tail, not a crash
+        out = render(path, tail_k=4,
+                     alerts_path=str(tmp_path / "nope.jsonl"))
+        assert "alerts: 0 fired" in out

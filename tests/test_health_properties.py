@@ -1,0 +1,60 @@
+"""Hypothesis property tests for the health observatory's sketches and
+detectors (skipped, like the other *_properties modules, when hypothesis
+is not installed — tests/test_health.py carries deterministic slices of
+the same invariants)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.health.drift import drift_init, drift_update  # noqa: E402
+from repro.health.sketch import (hist_init, hist_quantile,  # noqa: E402
+                                 hist_update_batch)
+
+pytestmark = pytest.mark.health
+
+SETTINGS = dict(max_examples=25, deadline=None)
+DK = dict(k=0.5, h=10.0, ph_delta=0.2, ph_lambda=25.0, ema_slow=0.02,
+          ema_fast=0.3, warmup=20, zclip=8.0, var_floor=1e-3)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-1.0, 1.0, allow_nan=False, width=32),
+                min_size=8, max_size=200),
+       st.sampled_from([0.1, 0.25, 0.5, 0.75, 0.9]),
+       st.sampled_from([8, 16, 32]))
+def test_hist_quantile_within_one_bin_width(xs, p, bins):
+    """The sketch's quantile is within one bin width of the exact
+    inverted-CDF empirical quantile, for any in-range stream, any
+    resolution, any probe point — the accuracy contract
+    docs/observability.md states."""
+    counts = hist_update_batch(hist_init(bins), jnp.asarray(xs, jnp.float32),
+                               -1.0, 1.0)
+    est = float(hist_quantile(counts, p, -1.0, 1.0))
+    exact = float(np.quantile(np.asarray(xs, np.float32), p,
+                              method="inverted_cdf"))
+    assert abs(est - exact) <= 2.0 / bins + 1e-5
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.floats(-5.0, 5.0, allow_nan=False),
+       st.floats(0.1, 3.0, allow_nan=False))
+def test_drift_never_fires_on_iid(seed, mu, sd):
+    """CUSUM/Page-Hinkley false-alarm invariant: on an i.i.d. Gaussian
+    stream — any location, any scale — the detector stays silent. The
+    defaults put the per-run false-alarm probability near exp(-2kh) ~
+    5e-5; standardization makes the bound location/scale free, which is
+    exactly what hypothesis probes here."""
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(mu, sd, size=300), jnp.float32)
+
+    def step(s, x):
+        s = drift_update(s, x, **DK)
+        return s, s.flag
+
+    _, flags = jax.lax.scan(step, drift_init(), xs)
+    assert float(jnp.max(flags)) == 0.0

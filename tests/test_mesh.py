@@ -155,6 +155,33 @@ class TestMeshedTraining:
         vals = sorted(per.values())
         assert vals[-1] <= 2.0 * vals[0]
 
+    def test_meshed_stream_contents_match_history(self, tmp_path):
+        """The metrics tap under SPMD: on a mesh the per-episode callback
+        switches to an unordered one (ordered callbacks are single-device-
+        only in XLA), but the scan's sequential data dependence still fires
+        it once per episode. The stream must be complete, in episode order,
+        and carry the same numbers the returned history does — a dropped or
+        duplicated record would silently corrupt every live watcher."""
+        from repro.eval.stream import MetricsSink, read_metrics
+        n, eps = 16, 6
+        mesh = make_fleet_mesh(8, 2)
+        traces = fleet_traces(jax.random.PRNGKey(1), n, eps * CFG.n_steps)
+        fleet = fleet_init(CFG, n, KEY, n_pods=2, mesh=mesh)
+        path = str(tmp_path / "run.jsonl")
+        with MetricsSink(path, meta={"agents": n}) as sink:
+            _, hist = train_fleet_scan(CFG, fleet, traces, mesh=mesh,
+                                       metrics_sink=sink, seed=3)
+        meta, records = read_metrics(path)
+        assert meta["agents"] == n
+        assert [r["episode"] for r in records] == list(range(eps))
+        for e, rec in enumerate(records):
+            for k, v in rec.items():
+                if k == "episode" or k not in hist:
+                    continue
+                np.testing.assert_allclose(
+                    v, float(np.asarray(hist[k])[e]), rtol=1e-6, atol=1e-7,
+                    err_msg=f"{k}@{e}")
+
     def test_meshed_run_with_lean_state_and_transport(self):
         """Mesh x dtype-policy x FL-codec composition: the lean fleet trains
         SPMD with the int8 transport codec and stays finite."""
